@@ -1,0 +1,120 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts.
+
+  compute    = HLO_FLOPs / peak_FLOPs          (per device; loop-aware count)
+  memory     = HLO_bytes / HBM_bw              (reported as [min, max] — min
+               assumes perfect TPU fusion, max is the raw op-granularity sum)
+  collective = wire_bytes / ICI_link_bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Dominant term classified on (compute, memory_min, collective); cells where
+memory_max flips the verdict are flagged with '*'.
+
+MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (serve);
+useful_ratio = MODEL_FLOPS / (HLO_FLOPs * chips) — the remat/recompute/
+masked-block waste detector.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> List[Dict]:
+    out = []
+    d = ART / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        stem_parts = p.stem.split("__")
+        cell_tag = stem_parts[2] if len(stem_parts) > 2 else ""
+        if cell_tag != tag:
+            continue
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def roofline_row(cell: Dict) -> Dict:
+    chips = cell["n_devices"]
+    t_comp = cell["flops_per_device"] / PEAK_FLOPS
+    t_mem_min = cell["bytes_min_per_device"] / HBM_BW
+    t_mem_max = cell["bytes_per_device"] / HBM_BW
+    # native-dtype wire bytes (undo XLA:CPU's bf16->f32 dot upcast artifact)
+    coll_bytes = cell["collectives"].get("total_native",
+                                         cell["collectives"]["total"])
+    t_coll = coll_bytes / ICI_BW
+    kind = cell["kind"]
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * cell["active_params"] * cell["tokens_per_step"]
+    hlo_total = cell["flops_per_device"] * chips
+    terms = {"compute": t_comp, "memory": t_mem_min, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    dominant_max = max({**terms, "memory": t_mem_max},
+                       key={**terms, "memory": t_mem_max}.get)
+    step_time = max(t_comp, t_mem_min, t_coll)  # perfect-overlap bound
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "layout": cell["layout"],
+        "t_compute_s": t_comp, "t_memory_min_s": t_mem_min,
+        "t_memory_max_s": t_mem_max, "t_collective_s": t_coll,
+        "dominant": dominant + ("*" if dominant_max != dominant else ""),
+        "model_flops": model_flops, "hlo_flops_total": hlo_total,
+        "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": (model_flops / PEAK_FLOPS / chips) / step_time
+        if step_time else 0.0,
+        "state_gb_per_device": cell.get("state_bytes_per_device", 0) / 1e9,
+    }
+
+
+def table(mesh: str = "single", tag: str = "") -> List[Dict]:
+    return [roofline_row(c) for c in load_cells(mesh, tag)]
+
+
+def markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | layout | compute s | memory s [min,max] | "
+           "collective s | dominant | useful | roofline frac | state GB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['layout']} "
+            f"| {r['t_compute_s']:.3f} "
+            f"| [{r['t_memory_min_s']:.3f}, {r['t_memory_max_s']:.3f}] "
+            f"| {r['t_collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r['state_gb_per_device']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False) -> Dict:
+    rows = table("single")
+    out_dir = ART.parent
+    (out_dir / "roofline_single.md").write_text(markdown(rows))
+    multi = table("multi")
+    if multi:
+        (out_dir / "roofline_multi.md").write_text(markdown(multi))
+    worst = sorted((r for r in rows if r["roofline_fraction"] > 0),
+                   key=lambda r: r["roofline_fraction"])[:5]
+    most_coll = sorted(rows, key=lambda r: -r["t_collective_s"])[:5]
+    return {
+        "n_cells_single": len(rows),
+        "n_cells_multi": len(multi),
+        "worst_roofline": [(r["arch"], r["shape"],
+                            round(r["roofline_fraction"], 4)) for r in worst],
+        "most_collective_bound": [(r["arch"], r["shape"],
+                                   round(r["t_collective_s"], 3))
+                                  for r in most_coll],
+        "table_path": str(out_dir / "roofline_single.md"),
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

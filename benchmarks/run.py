@@ -1,0 +1,79 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline
+report. Prints a ``name,seconds,derived`` CSV summary and writes full JSON to
+artifacts/bench/.
+
+  fig1   — concurrent-task burstiness (paper Fig. 1, Google-like trace)
+  fig3   — queueing-delay CDFs, Eagle vs CloudCoaster r=1..3 (paper Fig. 3)
+  table1 — transient lifetimes / active counts / cost saving (paper Table 1)
+  sweep  — beyond-paper (threshold x budget) fluid sweep (vmapped JAX)
+  roofline — three-term roofline per dry-run cell (deliverable g)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from benchmarks import fig1_burstiness, fig3_queueing_cdf, roofline, sweep_jax, table1_lifetimes
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def _derived(name: str, res: dict) -> str:
+    if name == "fig1":
+        return (f"peak/trough={res['peak_over_trough']:.1f}x "
+                f"peak={res['peak_concurrent']:.0f} mean={res['mean_concurrent']:.0f}")
+    if name == "fig3":
+        v = res["variants"]
+        d = v["default_bursts"]
+        p = v["paper_band_bursts"]
+        return (f"default: base={d['eagle_baseline']['short_avg_wait_s']:.0f}s "
+                f"r3={d['coaster_r3']['short_avg_wait_s']:.0f}s "
+                f"imp={d['avg_improvement_x']:.1f}x | paper-band imp="
+                f"{p['avg_improvement_x']:.1f}x (paper 4.8x)")
+    if name == "table1":
+        r3 = res["r3"]
+        return (f"r3: life={r3['avg_life_h']:.2f}h act={r3['avg_transient']:.1f} "
+                f"rnorm={r3['r_norm_ondemand']:.1f} save={r3['cost_saving']:.1%} "
+                f"(paper 29.5%)")
+    if name == "sweep":
+        return (f"best thr={res['best_threshold']:.2f} "
+                f"budget={res['best_budget']:.0f} delay={res['best_delay_s']:.1f}s")
+    if name == "roofline":
+        return (f"{res['n_cells_single']} single + {res['n_cells_multi']} "
+                f"multi cells; worst={res['worst_roofline'][:2]}")
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    ART.mkdir(parents=True, exist_ok=True)
+
+    benches = {
+        "fig1": fig1_burstiness.run,
+        "fig3": fig3_queueing_cdf.run,
+        "table1": table1_lifetimes.run,
+        "sweep": sweep_jax.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    print("name,seconds,derived")
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        res = fn(quick=args.quick)
+        dt = time.time() - t0
+        (ART / f"{name}.json").write_text(json.dumps(res, indent=1, default=float))
+        print(f"{name},{dt:.1f},{_derived(name, res)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Bursty serving with an elastic transient fleet (deliverable b).
+
+Real autoregressive decoding (a reduced gemma2-family model, prefill + KV
+cache + per-token decode through the production serve path) behind the
+CloudCoaster controller: replicas pinned by long jobs raise the long-load
+ratio; the controller rents transient replicas during request storms and
+drains them afterwards. Compares a static fleet vs the elastic fleet on the
+same request trace, with revocations and hedging enabled.
+
+Run:  PYTHONPATH=src python examples/serve_bursty.py
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.runtime import ElasticServingFleet, Request
+
+
+def build_decoder():
+    cfg = smoke_config("gemma2-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, PRE, MAX = 1, 16, 64
+    toks = jnp.ones((B, PRE), jnp.int32)
+    _, cache0 = model.prefill(params, tokens=toks, max_len=MAX)
+    step = jax.jit(lambda c, t, pos: model.decode_step(
+        params, c, tokens=t, pos=pos))
+    state = {"cache": cache0, "pos": PRE, "tok": jnp.ones((B, 1), jnp.int32)}
+    tokens_out = {"n": 0}
+
+    def decode_fn(replica_id):
+        logits, state["cache"] = step(state["cache"], state["tok"],
+                                      jnp.int32(state["pos"]))
+        state["tok"] = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        state["pos"] = min(state["pos"] + 1, 63)
+        tokens_out["n"] += 1
+
+    return decode_fn, tokens_out
+
+
+def make_workload(seed=0, n=900, horizon=1200):
+    rng = np.random.default_rng(seed)
+    ts = [int(rng.uniform(0, horizon)) for _ in range(n // 2)]
+    for w0 in (200, 700):  # two request storms
+        ts += [int(rng.uniform(w0, w0 + 80)) for _ in range(n // 4)]
+    reqs = [Request(i, t, gen_len=int(rng.integers(4, 16)))
+            for i, t in enumerate(sorted(ts))]
+    pinned = lambda t: 10 + (4 if (200 < t < 500 or 700 < t < 1000) else 0)
+    return reqs, pinned
+
+
+def main():
+    decode_fn, counter = build_decoder()
+    reqs, pinned = make_workload()
+    fresh = lambda: [Request(q.rid, q.arrival, q.gen_len) for q in reqs]
+
+    static = ElasticServingFleet(14, max_transient=0)
+    s_static = static.run(fresh(), pinned, 3000)
+
+    elastic = ElasticServingFleet(
+        14, threshold=0.75, max_transient=12, provisioning_delay=30,
+        revocation_mttf_ticks=2000, decode_fn=decode_fn, seed=0)
+    s_elastic = elastic.run(fresh(), pinned, 3000)
+
+    print(f"{'':24s}{'static':>12s}{'elastic':>12s}")
+    for k in ("avg_wait", "p99_wait", "max_wait", "n_done",
+              "avg_active_transients", "n_transients_used",
+              "n_revocations", "n_hedges"):
+        print(f"{k:24s}{s_static[k]:>12.1f}{s_elastic[k]:>12.1f}")
+    print(f"\nreal decode steps executed on-model: {counter['n']}")
+    print(f"avg wait improvement: "
+          f"{s_static['avg_wait'] / max(s_elastic['avg_wait'], 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

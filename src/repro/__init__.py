@@ -1,0 +1,17 @@
+"""repro — CloudCoaster reproduction + elastic JAX training/serving framework.
+
+Layers:
+  repro.core      — the paper's contribution: Eagle baseline + CloudCoaster
+                    transient manager (discrete-event + JAX slotted simulators).
+  repro.traces    — bursty workload trace synthesis (Yahoo/Google calibrated).
+  repro.models    — pure-JAX model zoo (dense/MoE/SSM/hybrid decoders).
+  repro.kernels   — Pallas TPU kernels (flash attn, flash decode, WKV6, SSM scan).
+  repro.optim     — AdamW, int8 optimizer states, gradient compression.
+  repro.data      — token pipeline.
+  repro.checkpoint— sharded async checkpointing, elastic reshard-on-restore.
+  repro.runtime   — elastic executor, revocation handling, CloudCoaster controller.
+  repro.parallel  — mesh/sharding rules (DP/FSDP/TP/EP/CP).
+  repro.launch    — mesh, dryrun, train, serve entry points.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,147 @@
+"""Sharded, async, atomic checkpointing with elastic reshard-on-restore.
+
+Production posture:
+  * atomic commit — writes go to ``<dir>/tmp.<step>`` and are published with
+    a single ``os.replace`` to ``<dir>/step_<k>``; a crash mid-write never
+    corrupts the latest checkpoint;
+  * async — serialization happens on a writer thread; the train loop only
+    pays for the device->host copy (``wait()`` joins before the next save or
+    at shutdown);
+  * rolling retention — keep the newest ``keep`` checkpoints;
+  * elastic restore — arrays are loaded host-side and ``jax.device_put`` onto
+    the *target* shardings, which may belong to a different mesh than the one
+    that saved (fewer/more pods after a revocation). Tested in
+    tests/test_checkpoint.py by saving on a 4-device mesh and restoring on 2;
+  * self-describing — tree structure and dtypes live in ``meta.json``; leaves
+    are stored in one ``.npz`` keyed by tree path (multi-host deployments
+    would write one npz per host slice; the path layout already allows it).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, state, *, blocking: bool = False):
+        self.wait()
+        host_flat = {k: np.asarray(jax.device_get(v))
+                     for k, v in _flatten(state).items()}
+        meta = {
+            "step": int(step),
+            "keys": sorted(host_flat),
+            "dtypes": {k: str(v.dtype) for k, v in host_flat.items()},
+        }
+
+        def write():
+            try:
+                tmp = self.dir / f"tmp.{step}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                np.savez(tmp / "arrays.npz", **host_flat)
+                (tmp / "meta.json").write_text(json.dumps(meta))
+                final = self.dir / f"step_{step:08d}"
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.iterdir():
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None, shardings=None):
+        """Restore into ``template``'s tree structure. ``shardings`` (same
+        tree shape, NamedSharding leaves) retargets arrays onto the current
+        mesh — the elastic-rescale path."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        arrays = np.load(d / "arrays.npz")
+        meta = json.loads((d / "meta.json").read_text())
+
+        def _fix_dtype(key, arr):
+            # bf16 (and other ml_dtypes) round-trip through npz as void —
+            # re-view with the dtype recorded at save time.
+            if arr.dtype.kind == "V":
+                import jax.numpy as jnp
+                return arr.view(jnp.dtype(meta["dtypes"][key]))
+            return arr
+        flat_template, treedef = jax.tree_util.tree_flatten(template)
+        keys = []
+        for path, _ in jax.tree_util.tree_flatten_with_path(template)[0]:
+            keys.append("/".join(
+                str(p.key) if hasattr(p, "key") else str(p.idx) for p in path))
+        flat_sh = (jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "mesh"))[0]
+            if shardings is not None else [None] * len(keys))
+        leaves = []
+        for key, tmpl, sh in zip(keys, flat_template, flat_sh):
+            arr = _fix_dtype(key, arrays[key])
+            if sh is not None:
+                leaves.append(jax.device_put(arr, sh))
+            else:
+                leaves.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,6 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    get_config,
+    smoke_config,
+)
+from repro.configs.shapes import SHAPES, ShapeCfg, cell_applicable  # noqa: F401

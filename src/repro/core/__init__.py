@@ -1,0 +1,16 @@
+"""The paper's contribution: Eagle-style hybrid scheduling + CloudCoaster's
+transient-aware elastic short partition.
+
+  jobs.py     — Job/Trace model
+  cluster.py  — SimConfig (paper §4 defaults) + server state
+  engine.py   — discrete-event simulator (Eagle baseline == replace_fraction 0;
+                CloudCoaster == replace_fraction p with transient manager)
+  metrics.py  — results & paper-table summaries
+  simjax.py   — JAX slotted-time simulator for vmap/pjit parameter sweeps
+  controller.py — the long-load-ratio controller as a reusable runtime policy
+"""
+
+from repro.core.cluster import SimConfig  # noqa: F401
+from repro.core.engine import simulate  # noqa: F401
+from repro.core.jobs import Job, Trace  # noqa: F401
+from repro.core.metrics import SimResult  # noqa: F401

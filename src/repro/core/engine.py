@@ -1,0 +1,323 @@
+"""Discrete-event simulator for Eagle-style hybrid scheduling with
+CloudCoaster's transient manager.
+
+Cluster model (following the Hawk/Eagle simulators):
+  * each server runs one task at a time with a FIFO queue;
+  * long jobs are placed by the centralized scheduler on the least-loaded
+    *general-partition* server (lazy min-heap over pending work);
+  * short tasks are placed by decentralized probing (power-of-d over the whole
+    cluster) using Eagle's succinct state: probes avoid servers that hold long
+    tasks; if every probe round fails the task falls back to the short-only
+    partition (static on-demand + active transients) — Eagle's "divide and
+    stick to your probes" guarantee that shorts never queue behind longs;
+  * CloudCoaster (replace_fraction > 0): on every long-task start/finish the
+    long-load ratio l_r = N_long_busy / N_total is recomputed; while
+    l_r > L_r^T and budget (K = r*N_s*p) remains, a transient server is
+    requested (online after provisioning_delay); while l_r < L_r^T, one
+    transient is drained (finishes its queue, then shuts down).
+
+Revocations: transient lifetimes in the paper's regime stay far below spot
+MTTF so the paper simulates none; set ``revocation_mttf`` to exercise the
+revocation path (queued tasks rescheduled through the normal short path;
+counted in the result).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.cluster import Server, SimConfig
+from repro.core.controller import ControllerConfig, FleetView, desired_delta
+from repro.core.jobs import Trace
+from repro.core.metrics import SimResult
+
+_ARRIVAL, _FINISH, _ONLINE, _REVOKE = 0, 1, 2, 3
+
+
+class _Sim:
+    def __init__(self, trace: Trace, cfg: SimConfig):
+        self.trace = trace
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0.0
+        self.events: List = []
+        self._seq = 0
+
+        self.servers: List[Server] = []
+        for i in range(cfg.n_general):
+            self.servers.append(Server(i, "general"))
+        for i in range(cfg.n_static_short):
+            self.servers.append(Server(cfg.n_general + i, "short"))
+        self.general_ids = list(range(cfg.n_general))
+        self.static_short_ids = list(
+            range(cfg.n_general, cfg.n_general + cfg.n_static_short))
+        self.active_transients: List[int] = []  # online, not draining
+        self.n_pending_transient = 0
+        self.n_transients_created = 0
+
+        # lazy least-loaded heap for the centralized (long) scheduler
+        self.long_heap = [(0.0, sid) for sid in self.general_ids]
+        heapq.heapify(self.long_heap)
+
+        # stats
+        self.short_waits: List[float] = []
+        self.long_waits: List[float] = []
+        self.lifetimes: List[float] = []
+        self.n_long_busy = 0  # servers whose *running* task is long
+        self.lr_samples: List = []
+        self._tint_last_t = 0.0
+        self._tint_area = 0.0
+        self.peak_active = 0
+        self.n_revocations = 0
+        self.n_rescheduled = 0
+
+    # ------------------------------------------------------------ event glue
+
+    def push(self, t: float, kind: int, payload=None):
+        self._seq += 1
+        heapq.heappush(self.events, (t, self._seq, kind, payload))
+
+    # ------------------------------------------------------------- bookkeeping
+
+    @property
+    def n_online(self) -> int:
+        return (self.cfg.n_general + self.cfg.n_static_short
+                + len(self.active_transients) + self._n_draining)
+
+    def lr(self) -> float:
+        n = self.n_online
+        return self.n_long_busy / n if n else 0.0
+
+    def _tint_touch(self):
+        dt = self.now - self._tint_last_t
+        if dt > 0:
+            self._tint_area += dt * len(self.active_transients)
+            self._tint_last_t = self.now
+
+    # --------------------------------------------------------------- serving
+
+    def _start_next(self, s: Server):
+        """If idle and queue nonempty, start the head task."""
+        if s.running is not None or not s.queue:
+            if (s.draining and s.running is None and not s.queue
+                    and s.shutdown_t is None):
+                self._shutdown(s)
+            return
+        dur, submit_t, is_long, job_id = s.queue.popleft()
+        wait = self.now - submit_t
+        if is_long:
+            self.long_waits.append(wait)
+        else:
+            self.short_waits.append(wait)
+        s.running = (dur, self.now, is_long, job_id)
+        if is_long:
+            self.n_long_busy += 1
+            self._manager_tick()
+        self.push(self.now + dur, _FINISH, s.sid)
+
+    def _finish(self, sid: int):
+        s = self.servers[sid]
+        if s.running is None:  # revoked mid-run; stale finish event
+            return
+        dur, start_t, is_long, job_id = s.running
+        if not math.isclose(start_t + dur, self.now, rel_tol=0, abs_tol=1e-6):
+            return  # stale event from a revoked/rescheduled task
+        s.running = None
+        s.pending_work -= dur
+        if is_long:
+            s.n_long -= 1
+            self.n_long_busy -= 1
+        if s.kind == "general":
+            heapq.heappush(self.long_heap, (s.pending_work, sid))
+        self._start_next(s)
+        if is_long:
+            self._manager_tick()
+
+    def _enqueue(self, sid: int, dur: float, is_long: bool, job_id: int):
+        s = self.servers[sid]
+        s.queue.append((dur, self.now, is_long, job_id))
+        s.pending_work += dur
+        if is_long:
+            s.n_long += 1
+        self._start_next(s)
+
+    # ------------------------------------------------------------- placement
+
+    def _place_long(self, dur: float, job_id: int):
+        # centralized least-loaded over the general partition (lazy heap)
+        while True:
+            work, sid = heapq.heappop(self.long_heap)
+            s = self.servers[sid]
+            if math.isclose(work, s.pending_work, rel_tol=0, abs_tol=1e-9):
+                break
+            heapq.heappush(self.long_heap, (s.pending_work, sid))
+        self._enqueue(sid, dur, True, job_id)
+        heapq.heappush(self.long_heap, (self.servers[sid].pending_work, sid))
+
+    def _probe_set(self) -> List[int]:
+        return self.general_ids  # shorts may probe anywhere; general is 98%
+
+    def _short_pool(self) -> List[int]:
+        return self.static_short_ids + self.active_transients
+
+    def _place_short(self, dur: float, job_id: int):
+        cfg = self.cfg
+        best: Optional[int] = None
+        # Eagle probing with succinct state: avoid long-occupied servers
+        pool = self._probe_set()
+        for _ in range(cfg.probe_retries):
+            cand = self.rng.integers(0, len(pool), cfg.probe_d)
+            for c in cand:
+                sid = pool[int(c)]
+                s = self.servers[sid]
+                if s.long_occupied:
+                    continue
+                if best is None or s.pending_work < self.servers[best].pending_work:
+                    best = sid
+            if best is not None:
+                break
+        if best is None:
+            # fall back to the short-only partition (never has longs)
+            spool = self._short_pool()
+            cand = self.rng.integers(0, len(spool), min(cfg.probe_d, len(spool)))
+            best = min((spool[int(c)] for c in cand),
+                       key=lambda sid: self.servers[sid].pending_work)
+        self._enqueue(best, dur, False, job_id)
+
+    # ------------------------------------------------------ transient manager
+
+    @property
+    def _n_draining(self) -> int:
+        return self._draining_count
+
+    def _manager_tick(self):
+        cfg = self.cfg
+        if cfg.n_replaced == 0:
+            self._sample_lr()
+            return
+        view = FleetView(
+            n_long_busy=self.n_long_busy,
+            n_online_stable=self.n_online - self._n_draining,
+            n_draining=self._n_draining,
+            n_pending=self.n_pending_transient,
+            n_active_transient=len(self.active_transients),
+        )
+        delta = desired_delta(
+            view, ControllerConfig(cfg.threshold, cfg.max_transient))
+        for _ in range(max(delta, 0)):
+            self.n_pending_transient += 1
+            self.push(self.now + cfg.provisioning_delay, _ONLINE, None)
+        for _ in range(max(-delta, 0)):
+            # prefer the least-loaded (fastest to drain)
+            sid = min(self.active_transients,
+                      key=lambda i: self.servers[i].pending_work)
+            self.active_transients.remove(sid)
+            self._tint_touch()
+            s = self.servers[sid]
+            s.draining = True
+            self._draining_count += 1
+            if s.idle:
+                self._shutdown(s)
+        self._sample_lr()
+
+    def _server_online(self):
+        cfg = self.cfg
+        self.n_pending_transient -= 1
+        sid = len(self.servers)
+        s = Server(sid, "transient", online_t=self.now)
+        self.servers.append(s)
+        self.n_transients_created += 1
+        self._tint_touch()
+        self.active_transients.append(sid)
+        self.peak_active = max(self.peak_active, len(self.active_transients))
+        if cfg.revocation_mttf > 0:
+            life = self.rng.exponential(cfg.revocation_mttf)
+            self.push(self.now + life, _REVOKE, sid)
+        self._sample_lr()
+
+    def _shutdown(self, s: Server):
+        s.shutdown_t = self.now
+        s.draining = False
+        self._draining_count -= 1
+        self.lifetimes.append(self.now - s.online_t)
+
+    def _revoke(self, sid: int):
+        s = self.servers[sid]
+        if s.shutdown_t is not None:
+            return
+        self.n_revocations += 1
+        if sid in self.active_transients:
+            self.active_transients.remove(sid)
+            self._tint_touch()
+        elif s.draining:
+            self._draining_count -= 1
+            s.draining = False
+        # reschedule queued + running short tasks through the normal path
+        requeue = list(s.queue)
+        s.queue.clear()
+        if s.running is not None:
+            dur, start_t, is_long, job_id = s.running
+            requeue.append((dur, start_t, is_long, job_id))
+            s.running = None
+        s.pending_work = 0.0
+        s.n_long = 0
+        s.shutdown_t = self.now
+        self.lifetimes.append(self.now - s.online_t)
+        for dur, _, is_long, job_id in requeue:
+            self.n_rescheduled += 1
+            self._place_short(dur, job_id)
+
+    def _sample_lr(self):
+        if (not self.lr_samples
+                or self.now - self.lr_samples[-1][0] >= 30.0):
+            self.lr_samples.append((self.now, self.lr()))
+
+    # ------------------------------------------------------------------ main
+
+    def run(self) -> SimResult:
+        self._draining_count = 0
+        for job in self.trace.jobs:
+            self.push(job.arrival, _ARRIVAL, job)
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            self.now = t
+            if kind == _ARRIVAL:
+                job = payload
+                if job.is_long:
+                    for dur in job.durations:
+                        self._place_long(float(dur), job.job_id)
+                else:
+                    for dur in job.durations:
+                        self._place_short(float(dur), job.job_id)
+            elif kind == _FINISH:
+                self._finish(payload)
+            elif kind == _ONLINE:
+                self._server_online()
+            elif kind == _REVOKE:
+                self._revoke(payload)
+        self._tint_touch()
+        horizon = max(self.now, 1e-9)
+        return SimResult(
+            config=self.cfg,
+            short_waits=np.asarray(self.short_waits),
+            long_waits=np.asarray(self.long_waits),
+            transient_lifetimes=np.asarray(self.lifetimes),
+            avg_active_transients=self._tint_area / horizon,
+            peak_active_transients=self.peak_active,
+            lr_samples=np.asarray(self.lr_samples),
+            n_revocations=self.n_revocations,
+            n_rescheduled=self.n_rescheduled,
+            extras={
+                "n_transients_created": self.n_transients_created,
+                "sim_end": self.now,
+            },
+        )
+
+
+def simulate(trace: Trace, cfg: SimConfig) -> SimResult:
+    return _Sim(trace, cfg).run()

@@ -1,0 +1,127 @@
+"""JAX slotted-time (fluid) cluster simulator — the scalable calibration
+engine for CloudCoaster parameter sweeps.
+
+The discrete-event simulator (engine.py) is exact but serial. For the
+paper's future-work direction ("evaluate on large-scale Google traces",
+sweep L_r^T / r / p), this module recasts the cluster as a fluid model
+stepped by ``lax.scan`` over fixed time slots:
+
+  state: long backlog (server-seconds), short backlog, transient count,
+         provisioning pipeline (shift register of pending requests)
+  per slot: long servers busy = min(general, backlog-driven demand);
+            l_r = long_busy / total; controller add/drain (paper §3.2,
+            same thresholds as the DES); short service capacity =
+            short partition + idle general servers (Eagle lets shorts
+            run anywhere not long-occupied).
+
+Everything is jit/vmap-able: ``sweep`` vmaps over (threshold, r, p) grids,
+and the grid axis pjit-shards over the "data" mesh axis — a cluster-design
+study that runs as one SPMD program (examples/sweep_jax.py).
+
+Validation: tests/test_simjax.py checks the fluid model reproduces the DES's
+qualitative orderings (r=1 ~ baseline, delay monotone decreasing in r,
+cost-bounded transient usage).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jobs import Trace
+
+
+@dataclass(frozen=True)
+class FluidConfig:
+    n_general: int = 3920
+    n_static_short: int = 40  # (1-p) * N_s
+    dt: float = 10.0  # slot seconds
+    provision_slots: int = 12  # 120 s at dt=10
+
+
+def trace_to_rates(trace: Trace, dt: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Bin the trace into per-slot arriving work (server-seconds/slot)."""
+    n = int(np.ceil(trace.horizon / dt)) + 1
+    long_w = np.zeros(n)
+    short_w = np.zeros(n)
+    for j in trace.jobs:
+        b = min(int(j.arrival // dt), n - 1)
+        (long_w if j.is_long else short_w)[b] += j.work
+    return long_w, short_w
+
+
+def simulate_fluid(long_work, short_work, cfg: FluidConfig, *,
+                   threshold, max_transient) -> Dict[str, jax.Array]:
+    """Fluid CloudCoaster. threshold/max_transient may be traced scalars
+    (vmap over sweeps)."""
+    dt = cfg.dt
+    n_gen = cfg.n_general
+    n_ss = cfg.n_static_short
+    thr = jnp.asarray(threshold, jnp.float32)
+    k_max = jnp.asarray(max_transient, jnp.float32)
+
+    def step(carry, inp):
+        bl_long, bl_short, n_tr, pipe = carry
+        arr_l, arr_s = inp
+        bl_long = bl_long + arr_l
+        # long servers busy this slot (work-conserving fluid)
+        long_busy = jnp.minimum(n_gen, bl_long / dt)
+        bl_long = jnp.maximum(bl_long - long_busy * dt, 0.0)
+        # transients coming online
+        n_tr = n_tr + pipe[0]
+        pipe = jnp.concatenate([pipe[1:], jnp.zeros((1,))])
+        total = n_gen + n_ss + n_tr
+        lr = long_busy / total
+        # controller (paper §3.2): proportional fluid form of the unit loop
+        want_total = long_busy / thr
+        add = jnp.clip(want_total - (total + pipe.sum()),
+                       0.0, k_max - (n_tr + pipe.sum()))
+        add = jnp.where(lr > thr, add, 0.0)
+        pipe = pipe.at[-1].add(add)
+        drain = jnp.clip(total - jnp.maximum(want_total, n_gen + n_ss),
+                         0.0, n_tr)
+        drain = jnp.where(lr < thr, drain, 0.0)
+        n_tr = n_tr - drain
+        # short service: short partition + idle general servers
+        idle_gen = jnp.maximum(n_gen - long_busy, 0.0)
+        cap = (n_ss + n_tr + idle_gen) * dt
+        bl_short = bl_short + arr_s
+        served = jnp.minimum(bl_short, cap)
+        bl_short = bl_short - served
+        # Little's-law delay estimate for short work
+        rate = jnp.maximum(cap / dt, 1e-6)
+        delay = bl_short / rate
+        out = {"lr": lr, "n_transient": n_tr, "short_delay": delay,
+               "long_busy": long_busy}
+        return (bl_long, bl_short, n_tr, pipe), out
+
+    pipe0 = jnp.zeros((cfg.provision_slots,))
+    carry0 = (jnp.float32(0), jnp.float32(0), jnp.float32(0), pipe0)
+    xs = (jnp.asarray(long_work, jnp.float32), jnp.asarray(short_work, jnp.float32))
+    _, series = jax.lax.scan(step, carry0, xs)
+    return {
+        "avg_short_delay": series["short_delay"].mean(),
+        "max_short_delay": series["short_delay"].max(),
+        "avg_transients": series["n_transient"].mean(),
+        "peak_transients": series["n_transient"].max(),
+        "avg_lr": series["lr"].mean(),
+        "series": series,
+    }
+
+
+def sweep(long_work, short_work, cfg: FluidConfig, thresholds, max_transients):
+    """vmap the fluid simulator over a (threshold x budget) grid. Returns
+    dict of (T, K) arrays. Under a mesh, shard the grid axes over "data"."""
+    def one(thr, k):
+        out = simulate_fluid(long_work, short_work, cfg,
+                             threshold=thr, max_transient=k)
+        out.pop("series")
+        return out
+
+    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
+    return f(jnp.asarray(thresholds, jnp.float32),
+             jnp.asarray(max_transients, jnp.float32))

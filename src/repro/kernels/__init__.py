@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots of the served workloads.
+
+Each kernel ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (+ custom_vjp where training uses it)
+  ref.py    — pure-jnp oracle; tests assert allclose over shape/dtype sweeps
+
+This container is CPU-only: kernels are VALIDATED with interpret=True (the
+kernel body runs in Python per block) and TARGET TPU (Mosaic) for deployment.
+The model code's default path is pure-XLA jnp so the multi-pod dry-run lowers
+without Mosaic; ``ModelConfig.use_pallas`` routes the hot ops through these
+kernels.
+"""

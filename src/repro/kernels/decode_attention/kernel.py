@@ -1,0 +1,96 @@
+"""Flash-decode — Pallas TPU kernel.
+
+GPU flash-decode splits the KV cache across SMs and combines partial
+softmaxes in a second pass. The TPU-native shape of the same idea: the cache
+length is the innermost *sequential* grid dimension, so the partial-softmax
+state (m, l, acc) lives in VMEM scratch across cache blocks and no combine
+pass exists. Cross-chip cache splits (cache_len sharded over "model") are
+handled one level up by XLA SPMD inserting the max/sum all-reduces — see
+repro.parallel.layouts decode rules.
+
+Grid: (B, KV, n_L_blocks). All G=H/KV query heads of a kv-head ride in one
+block (G x hd fits VMEM), so the MXU sees (G, hd) x (hd, bL) matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, softcap, n_l):
+    il = pl.program_id(2)
+
+    @pl.when(il == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
+    k = k_ref[0, 0]  # (bL, hd)
+    s = jax.lax.dot_general(q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bL)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias_ref[...][None, :]
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0, 0],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(il == n_l - 1)
+    def _out():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, bias, *, softcap=0.0, block_l=256,
+                         interpret=False):
+    """q: (B,H,hd); k,v: (B,KV,L,hd); bias: (L,) f32. Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    KV, L = k.shape[1], k.shape[2]
+    G = H // KV
+    bl = min(block_l, L)
+    assert L % bl == 0, (L, bl)
+    n_l = L // bl
+    qg = q.reshape(B, KV, G, hd)
+
+    kern = functools.partial(_kernel, scale=hd**-0.5, softcap=softcap, n_l=n_l)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, KV, n_l),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, g, j: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, bl, hd), lambda b, g, j: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, bl, hd), lambda b, g, j: (b, g, j, 0)),
+            pl.BlockSpec((bl,), lambda b, g, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, g, j: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            _VMEM((G, 1), jnp.float32),
+            _VMEM((G, 1), jnp.float32),
+            _VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, bias)
+    return out.reshape(B, H, hd)

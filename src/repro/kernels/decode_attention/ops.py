@@ -1,0 +1,15 @@
+"""Public decode-attention op (inference only — no VJP needed)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+def decode_attention(q, k, v, bias, *, softcap=0.0, block_l=256,
+                     interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return decode_attention_fwd(q, k, v, bias, softcap=softcap,
+                                block_l=block_l, interpret=interpret)

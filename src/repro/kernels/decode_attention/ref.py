@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for single-token decode attention against a KV cache.
+
+q: (B, H, hd) — one new token per sequence.
+k, v: (B, KV, L, hd) — cache (RoPE'd keys at absolute slots).
+bias: (L,) additive f32 mask (0 = attend, NEG_INF = blocked) — precomputed by
+the caller from cache slot positions (covers rolling-window staleness,
+unwritten slots and sliding windows uniformly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, bias, *, softcap=0.0):
+    B, H, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = hd**-0.5
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bklh->bkgl", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias[None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,bklh->bkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, hd).astype(q.dtype)

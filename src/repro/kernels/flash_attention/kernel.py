@@ -1,0 +1,132 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+TPU adaptation (vs. the CUDA original): blocks are MXU-shaped (multiples of
+128 on seq dims, head_dim padded to 128 by the caller's models), the online
+softmax accumulators (m, l, acc) live in VMEM scratch and persist across the
+sequential innermost k-block grid dimension (TPU grids iterate sequentially —
+no atomics or inter-CTA reductions needed), and fully-masked blocks are
+skipped with ``pl.when`` on block-level position bounds (causal /
+sliding-window / prefix-LM).
+
+Grid: (B, H, n_q_blocks, n_k_blocks), innermost = k blocks.
+GQA: the k/v BlockSpec index maps head h to kv-head h // G.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces (importable on CPU; used by interpret mode too)
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, prefix_len, q_offset,
+            block_q, block_k, n_k):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = iq * block_q + q_offset
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    k_hi = k_lo + block_k - 1
+
+    visible = jnp.bool_(True)
+    if causal:
+        visible = q_hi >= k_lo
+    if window and window > 0:
+        # block visible iff its *closest* (q,k) pair is inside the window
+        visible = jnp.logical_and(visible, (q_lo - k_hi) < window)
+    if prefix_len and prefix_len > 0:
+        visible = jnp.logical_or(visible, k_lo < prefix_len)
+
+    @pl.when(visible)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (bq, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok = k_pos <= q_pos
+        if window and window > 0:
+            ok = jnp.logical_and(ok, (q_pos - k_pos) < window)
+        if prefix_len and prefix_len > 0:
+            ok = jnp.logical_or(ok, k_pos < prefix_len)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _out():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        prefix_len=0, q_offset=0, block_q=128, block_k=128,
+                        interpret=False):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd). Returns (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    n_q, n_k = Sq // bq, Sk // bk
+    grid = (B, H, n_q, n_k)
+
+    kern = functools.partial(
+        _kernel, scale=hd**-0.5, causal=causal, window=window,
+        softcap=softcap, prefix_len=prefix_len, q_offset=q_offset,
+        block_q=bq, block_k=bk, n_k=n_k)
+
+    scratch = [
+        _VMEM((bq, 1), jnp.float32),
+        _VMEM((bq, 1), jnp.float32),
+        _VMEM((bq, hd), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for flash attention.
+
+Semantics: GQA causal attention with optional sliding window, gemma2-style
+logit soft-capping, and prefix-LM bidirectional prefix — matching
+repro.models.attention exactly (that module is property-tested against the
+model's direct path; this oracle is the kernel contract).
+
+Layout: q (B, H, Sq, hd); k, v (B, KV, Sk, hd); H % KV == 0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                  prefix_len=0, q_offset=0):
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd**-0.5
+    qg = q.reshape(B, KV, G, Sq, hd)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = k_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        ok = ok & ((q_pos[:, None] - k_pos[None, :]) < window)
+    if prefix_len and prefix_len > 0:
+        ok = ok | (k_pos[None, :] < prefix_len)
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (matches
+repro.models.rwkv._wkv_scan exactly).
+
+    y_t = r_t . (S_{t-1} + u * (k_t  v_t^T))
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+r,k,v,w: (B, H, S, hd); u: (H, hd); s0: (B, H, hd, hd) f32.
+Returns (y (B,H,S,hd) f32, sT (B,H,hd,hd) f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None][..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(t.transpose(2, 0, 1, 3).astype(jnp.float32) for t in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3), sT

@@ -1,0 +1,1 @@
+from repro.kernels.ssm_scan.ops import ssm_scan  # noqa: F401

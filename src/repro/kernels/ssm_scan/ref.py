@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Mamba selective scan (matches
+repro.models.mamba._scan_ssm exactly).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t
+    y_t = <h_t, C_t> + D * x_t
+
+x, dt: (B, S, Di); Bc, Cc: (B, S, N); A: (Di, N); D: (Di,); h0: (B, Di, N).
+Returns (y (B,S,Di) f32, hT (B,Di,N) f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, A, Bc, Cc, D, h0):
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        da = jnp.exp(dt_t[..., None] * A)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + D * x_t
+        return h, y
+
+    xs = (
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        Bc.transpose(1, 0, 2).astype(jnp.float32),
+        Cc.transpose(1, 0, 2).astype(jnp.float32),
+        x.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), hT

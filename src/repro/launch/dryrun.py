@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces artifacts/dryrun/<mesh>/<arch>__<shape>[__tag].json
+with cost_analysis (FLOPs, bytes), memory analysis, the collective-byte
+breakdown parsed from the compiled HLO (while-loop trip counts folded in),
+and static state-size accounting. benchmarks/roofline.py turns these into the
+three-term roofline table in EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+      --shape train_4k --mesh single --tag tp_variant --set layout=tp
+"""
+
+import argparse
+import json
+import math
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_partition, batch_struct, fix_divisibility
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    train_state_specs,
+    train_state_struct,
+)
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.optim.schedule import cosine_schedule
+from repro.parallel import use_sharding_ctx
+from repro.parallel.hlo import analyze
+from repro.parallel.layouts import (
+    cache_specs,
+    layout_rules,
+    param_specs,
+    to_shardings,
+)
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _bytes_per_device(struct_tree, spec_tree, mesh) -> float:
+    from repro.parallel.layouts import axis_size
+    from jax.sharding import PartitionSpec as P
+
+    total = 0.0
+    structs = jax.tree.leaves(struct_tree)
+    specs = jax.tree.flatten(spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
+    for sds, spec in zip(structs, specs):
+        n = math.prod(sds.shape) * jnp.dtype(sds.dtype).itemsize
+        shards = 1
+        for ax in spec:
+            shards *= axis_size(mesh, ax)
+        total += n / shards
+    return total
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, layout=None, overrides=None):
+    """Returns (fn, args, in_shardings, out_shardings, meta)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    step_kind = shape.kind
+    rules = layout_rules(mesh, cfg, step_kind, global_batch=shape.global_batch,
+                         layout=layout)
+    model = build_model(cfg)
+    pshape = model.init_shape()
+    pspec = param_specs(pshape, mesh, rules)
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": step_kind,
+        "layout": layout or cfg.layout,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params": model.param_count(), "active_params": model.active_param_count(),
+    }
+    if step_kind == "train":
+        opt = AdamW(lr=cosine_schedule(3e-4, 100, 10000),
+                    moments_dtype=cfg.opt_moments_dtype)
+        fn = make_train_step(model, opt)
+        state_struct = train_state_struct(model, opt)
+        state_spec = train_state_specs(pspec, opt)
+        bstruct = batch_struct(cfg, "train", shape.global_batch, shape.seq_len)
+        bspec = fix_divisibility(batch_partition(cfg, "train", rules), bstruct, mesh)
+        args = (state_struct, bstruct)
+        in_sh = (to_shardings(state_spec, mesh), to_shardings(bspec, mesh))
+        out_sh = (to_shardings(state_spec, mesh), None)
+        meta["state_bytes_per_device"] = _bytes_per_device(state_struct, state_spec, mesh)
+        meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+    elif step_kind == "prefill":
+        fn = make_prefill_step(model, max_len=shape.seq_len)
+        bstruct = batch_struct(cfg, "prefill", shape.global_batch, shape.seq_len)
+        bspec = fix_divisibility(batch_partition(cfg, "prefill", rules), bstruct, mesh)
+        args = (pshape, bstruct)
+        in_sh = (to_shardings(pspec, mesh), to_shardings(bspec, mesh))
+        out_sh = None
+        meta["state_bytes_per_device"] = _bytes_per_device(pshape, pspec, mesh)
+        meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+    else:  # decode
+        fn = make_decode_step(model)
+        B, S = shape.global_batch, shape.seq_len
+        cstruct = model.cache_shape(B, S)
+        cspec = cache_specs(model, mesh, rules, B, S)
+        bstruct = batch_struct(cfg, "decode", B, S)
+        bspec = fix_divisibility(batch_partition(cfg, "decode", rules), bstruct, mesh)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (pshape, cstruct, bstruct, pos)
+        in_sh = (to_shardings(pspec, mesh), to_shardings(cspec, mesh),
+                 to_shardings(bspec, mesh), None)
+        out_sh = (None, to_shardings(cspec, mesh))
+        meta["state_bytes_per_device"] = (
+            _bytes_per_device(pshape, pspec, mesh)
+            + _bytes_per_device(cstruct, cspec, mesh))
+        meta["tokens_per_step"] = B
+    return fn, args, in_sh, out_sh, rules, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, layout=None,
+             overrides=None, tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, out_sh, rules, meta = build_cell(
+        arch, shape_name, mesh, layout=layout, overrides=overrides)
+    meta["mesh"] = "multi" if multi_pod else "single"
+    meta["n_devices"] = mesh.size
+    t0 = time.time()
+    with mesh, use_sharding_ctx(mesh, rules):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    meta["t_lower_s"] = round(t_lower, 2)
+    meta["t_compile_s"] = round(t_compile, 2)
+
+    # raw XLA cost analysis (NOTE: does not fold while-loop trip counts)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    meta["xla_flops_per_device"] = float(cost.get("flops", -1.0))
+    meta["xla_bytes_accessed_per_device"] = float(cost.get("bytes accessed", -1.0))
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "peak_memory_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    meta[k] = int(v)
+    except Exception as e:  # CPU backend may not support it
+        meta["memory_analysis_error"] = str(e)
+
+    # loop-aware accounting (trip counts folded in; see repro.parallel.hlo)
+    hlo = compiled.as_text()
+    a = analyze(hlo)
+    meta["flops_per_device"] = a["flops"]
+    meta["bytes_per_device"] = a["bytes"]
+    meta["bytes_min_per_device"] = a["bytes_min"]
+    meta["collectives"] = dict(a["collectives"], total=a["collective_total"],
+                               total_native=a["collective_total_native"],
+                               top_ops=a["top_ops"])
+    meta["top_dots"] = a.get("top_dots", [])
+    meta["hlo_bytes"] = len(hlo)
+    return meta
+
+
+def cell_path(arch, shape_name, multi_pod, tag="") -> pathlib.Path:
+    sub = "multi" if multi_pod else "single"
+    name = f"{arch}__{shape_name}" + (f"__{tag}" if tag else "") + ".json"
+    return ART / sub / name
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out or None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--layout", default=None)
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    overrides = _parse_overrides(args.overrides)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                path = cell_path(arch, shape_name, multi, args.tag)
+                if not cell_applicable(arch, shape_name):
+                    print(f"SKIP (inapplicable) {arch} {shape_name}")
+                    n_skip += 1
+                    continue
+                if path.exists() and not args.force:
+                    print(f"CACHED {path.name} ({'multi' if multi else 'single'})")
+                    n_ok += 1
+                    continue
+                label = f"{arch} x {shape_name} [{'multi' if multi else 'single'}]"
+                print(f"RUN  {label} ...", flush=True)
+                try:
+                    meta = run_cell(arch, shape_name, multi, layout=args.layout,
+                                    overrides=overrides, tag=args.tag)
+                    path.parent.mkdir(parents=True, exist_ok=True)
+                    path.write_text(json.dumps(meta, indent=1))
+                    print(f"  OK lower={meta['t_lower_s']}s compile={meta['t_compile_s']}s "
+                          f"flops/dev={meta['flops_per_device']:.3e} "
+                          f"bytes/dev={meta['bytes_per_device']:.3e} "
+                          f"coll={meta['collectives']['total']:.3e}B", flush=True)
+                    n_ok += 1
+                except Exception:
+                    n_fail += 1
+                    print(f"  FAIL {label}\n{traceback.format_exc()}", flush=True)
+    print(f"dryrun done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

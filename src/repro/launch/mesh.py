@@ -1,0 +1,43 @@
+"""Production meshes. Importing this module never touches jax device state —
+``make_production_mesh`` is a function, called only by launchers.
+
+Single pod:  (16, 16)    = 256 chips, axes ("data", "model").
+Multi-pod:   (2, 16, 16) = 512 chips, axes ("pod", "data", "model");
+             the "pod" axis carries only data-parallel gradient reduction
+             (hierarchical: reduce-scatter in-pod, all-reduce across pods,
+             as lowered by XLA).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devs)}. "
+            "The dry-run launcher must set "
+            'XLA_FLAGS="--xla_force_host_platform_device_count=512" before '
+            "any jax import (see repro/launch/dryrun.py)."
+        )
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Tiny mesh for CPU multi-device tests (device count forced by the test)."""
+    devs = jax.devices()
+    n = math.prod(shape)
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

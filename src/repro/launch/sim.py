@@ -1,0 +1,60 @@
+"""Scheduler-simulation launcher (the paper's own experiment surface).
+
+  PYTHONPATH=src python -m repro.launch.sim --servers 4000 --short 80 \
+      --p 0.5 --r 3 --threshold 0.95 --horizon-h 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--servers", type=int, default=4000)
+    ap.add_argument("--short", type=int, default=80)
+    ap.add_argument("--p", type=float, default=0.5)
+    ap.add_argument("--r", type=float, default=3.0)
+    ap.add_argument("--threshold", type=float, default=0.95)
+    ap.add_argument("--provisioning", type=float, default=120.0)
+    ap.add_argument("--horizon-h", type=float, default=24.0)
+    ap.add_argument("--burst-mult", type=float, default=5.0)
+    ap.add_argument("--revocation-mttf-h", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--fluid", action="store_true",
+                    help="use the JAX slotted simulator instead of the DES")
+    args = ap.parse_args()
+
+    from repro.core import SimConfig, simulate
+    from repro.traces import yahoo_like
+
+    tr = yahoo_like(seed=args.seed, n_servers=args.servers,
+                    n_short=args.short, horizon=args.horizon_h * 3600,
+                    burst_mult=args.burst_mult)
+    print(f"trace: jobs={tr.n_jobs} tasks={tr.n_tasks} "
+          f"util={tr.meta['utilization']:.3f}")
+    if args.fluid:
+        from repro.core.simjax import FluidConfig, simulate_fluid, trace_to_rates
+
+        lw, sw = trace_to_rates(tr, 10.0)
+        k = int(args.r * args.short * args.p)
+        out = simulate_fluid(
+            lw, sw,
+            FluidConfig(n_general=args.servers - args.short,
+                        n_static_short=int(args.short * (1 - args.p))),
+            threshold=args.threshold, max_transient=k)
+        out.pop("series")
+        print(json.dumps({k: float(v) for k, v in out.items()}, indent=1))
+        return
+    cfg = SimConfig(
+        n_servers=args.servers, n_short_reserved=args.short,
+        replace_fraction=args.p, cost_ratio=args.r, threshold=args.threshold,
+        provisioning_delay=args.provisioning,
+        revocation_mttf=args.revocation_mttf_h * 3600, seed=args.seed)
+    res = simulate(tr, cfg)
+    print(json.dumps(res.summary(), indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

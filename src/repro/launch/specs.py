@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every model input.
+
+``input_specs`` returns abstract arrays (no allocation) for train / prefill /
+decode steps of any (arch, shape) cell — the same pattern the multi-pod
+dry-run lowers against. Modality frontends are STUBS per the assignment:
+audio supplies precomputed frame embeddings, vlm supplies patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.decoder import DecoderLM
+from repro.parallel.sharding import ShardingRules
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, kind: str, batch: int, seq_len: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    if kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            out = {"embeds": _sds((batch, seq_len, cfg.d_model), dt)}
+            if kind == "train":
+                out["labels"] = _sds((batch, seq_len), jnp.int32)
+            return out
+        if cfg.family == "vlm":
+            P_ = cfg.prefix_len
+            return {
+                "prefix_embeds": _sds((batch, P_, cfg.d_model), dt),
+                "tokens": _sds((batch, seq_len - P_), jnp.int32),
+            }
+        return {"tokens": _sds((batch, seq_len), jnp.int32)}
+    # decode: one new token
+    if cfg.family == "audio":
+        return {"embeds": _sds((batch, 1, cfg.d_model), dt)}
+    return {"tokens": _sds((batch, 1), jnp.int32)}
+
+
+def batch_partition(cfg: ModelConfig, kind: str, rules: ShardingRules) -> Dict[str, P]:
+    b = rules.resolve("batch")
+    s = rules.resolve("act_seq") if kind in ("train", "prefill") else None
+    if kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            out = {"embeds": P(b, s, None)}
+            if kind == "train":
+                out["labels"] = P(b, s)
+            return out
+        if cfg.family == "vlm":
+            return {"prefix_embeds": P(b, None, None), "tokens": P(b, s)}
+        return {"tokens": P(b, s)}
+    if cfg.family == "audio":
+        return {"embeds": P(b, None, None)}
+    return {"tokens": P(b, None)}
+
+
+def fix_divisibility(spec_tree, struct_tree, mesh):
+    """Replace sharded dims that don't divide evenly with replication."""
+    from repro.parallel.layouts import axis_size
+
+    def fix(spec, sds):
+        out = []
+        for ax, dim in zip(tuple(spec) + (None,) * (sds.ndim - len(spec)), sds.shape):
+            if ax is not None and dim % axis_size(mesh, ax) != 0:
+                ax = None
+            out.append(ax)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, struct_tree,
+                        is_leaf=lambda x: isinstance(x, P))

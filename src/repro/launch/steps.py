@@ -1,0 +1,111 @@
+"""Step factories: train_step (grad-accum microbatching + AdamW), prefill and
+decode serve steps. These are the functions the dry-run lowers and the
+examples execute.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.decoder import DecoderLM
+from repro.optim.adamw import AdamW
+
+
+def make_train_step(model: DecoderLM, opt: AdamW, num_microbatches: Optional[int] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Gradient accumulation: the global batch is reshaped to
+    (M, B/M, ...) and scanned; grads accumulate in ``grad_acc_dtype``.
+    """
+    cfg = model.cfg
+    M = num_microbatches or cfg.num_microbatches
+    acc_dt = jnp.dtype(getattr(cfg, "grad_acc_dtype", "float32"))
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        params = state["params"]
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(acc_dt), gacc, grads)
+                return (gacc, lacc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), ms = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / M, gsum)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+            metrics["loss"] = lsum / M
+        new_params, new_opt = opt.update(grads, state["opt"], params, state["step"])
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: DecoderLM, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, max_len=max_len, **batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: DecoderLM):
+    def decode_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, pos=pos, **batch)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec assembly for a whole train/serve state
+
+
+def opt_state_specs(param_spec_tree, opt: AdamW):
+    """Mirror param PartitionSpecs onto AdamW moment state."""
+    is_p = lambda x: isinstance(x, P)
+    if opt.moments_dtype == "int8":
+        def mom(ps):
+            ts = tuple(ps)
+            return {"q": ps, "s": P(*ts[:-1], None) if ts else P(None)}
+    else:
+        def mom(ps):
+            return ps
+    m = jax.tree.map(mom, param_spec_tree, is_leaf=is_p)
+    out = {"m": m, "v": m}
+    if opt.error_feedback:
+        out["ef"] = param_spec_tree
+    return out
+
+
+def train_state_specs(param_spec_tree, opt: AdamW):
+    return {
+        "params": param_spec_tree,
+        "opt": opt_state_specs(param_spec_tree, opt),
+        "step": P(),
+    }
+
+
+def train_state_struct(model: DecoderLM, opt: AdamW):
+    params_shape = model.init_shape()
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    return {
+        "params": params_shape,
+        "opt": opt_shape,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, LayerSpec, block_structure  # noqa: F401
+from repro.models.decoder import DecoderLM, build_model  # noqa: F401

@@ -1,0 +1,141 @@
+"""Shared layer primitives: norms, activations, RoPE, masks, init helpers.
+
+Everything is a pure function over explicit param pytrees (nested dicts of
+arrays) — no module framework. Params are created by ``init_*`` helpers and
+consumed by ``apply_*`` functions; both sides agree on dict keys.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Scaled normal init: std = 1/sqrt(fan_in)."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) * (fan_in**-0.5)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * (shape[-1] ** -0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.zeros((d,), pdtype(cfg)) if cfg.norm_plus_one else jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    """RMSNorm (optionally gemma (1+w)) or LayerNorm, computed in f32."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        scale = p["scale"].astype(jnp.float32)
+        if cfg.norm_plus_one:
+            scale = 1.0 + scale
+        y = y * scale
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+
+
+def act_fn(name: str):
+    if name in ("swiglu",):
+        return jax.nn.silu
+    if name in ("geglu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def softcap(x, cap: float):
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap and cap > 0.0:
+        return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# positional encodings
+
+
+def apply_rope(x, positions, theta: float):
+    """NeoX split-half RoPE. x: (..., S, H, hd); positions: broadcastable (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d_model: int):
+    """Classic transformer sinusoidal embedding. positions: (..., S) -> (..., S, d)."""
+    half = d_model // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention masks (position-based so they work for chunked & cached paths)
+
+
+def allow_mask(q_pos, k_pos, *, window: int = 0, prefix_len: int = 0):
+    """Boolean attention permission from absolute positions.
+
+    q_pos: (..., Sq), k_pos: (..., Sk). Negative k_pos marks invalid cache
+    slots. Rules: causal; optional sliding window (relative distance < window);
+    optional bidirectional prefix (any query may see k_pos < prefix_len —
+    prefix-LM a la PaliGemma).
+    """
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = k <= q
+    if window and window > 0:
+        ok = ok & ((q - k) < window)
+    if prefix_len and prefix_len > 0:
+        ok = ok | (k < prefix_len)
+    ok = ok & (k >= 0)
+    return ok
+
+
+NEG_INF = -2.3819763e38  # ~ finfo(f32).min/1.5; safe under +/- arithmetic

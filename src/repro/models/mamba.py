@@ -1,0 +1,150 @@
+"""Mamba-1 selective SSM block (Jamba variant: RMSNorm on dt/B/C).
+
+Recurrence (per channel c, state dim n):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t * B_t
+    y_t = <h_t, C_t> + D * x_t
+with input-dependent dt (softplus), B, C. The pure-jnp path runs an
+``lax.scan`` over time (the Pallas chunked kernel in
+``repro.kernels.ssm_scan`` is the TPU fast path with identical semantics).
+
+TP: all inner (d_inner) dims are channel-parallel — conv, gating, A/D and the
+recurrence are elementwise in d_inner, so sharding d_inner over "model" needs
+collectives only at x_proj (small psum) and out_proj (psum) — handled by XLA
+from the logical annotations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.config import ModelConfig
+from repro.parallel import logical
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d, di, n, r, w = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank, cfg.ssm_conv_width
+    ks = jax.random.split(key, 6)
+    # S4D-real A init: A[c, j] = -(j + 1)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (w, di), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, r + 2 * n), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (r, di), dtype=dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(a),  # f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+        # Jamba-style inner RMSNorm scales for dt / B / C
+        "dt_norm": jnp.ones((r,), jnp.float32),
+        "b_norm": jnp.ones((n,), jnp.float32),
+        "c_norm": jnp.ones((n,), jnp.float32),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf**2, -1, keepdims=True) + eps) * scale)
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,di), w: (W,di). state: (B,W-1,di) or None.
+
+    Returns (y, new_state) where new_state holds the trailing W-1 inputs.
+    """
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, di)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, xp.shape[1] - (W - 1) :]
+    return y, new_state
+
+
+def _ssm_params(p, xc, cfg: ModelConfig):
+    """From conv output xc (B,S,di) derive (dt (B,S,di), Bc, Cc (B,S,n))."""
+    n, r = cfg.ssm_state_dim, cfg.dt_rank
+    dbc = xc @ p["x_proj"]
+    dt_r, Bc, Cc = jnp.split(dbc, [r, r + n], axis=-1)
+    dt_r = _rms(dt_r, p["dt_norm"])
+    Bc = _rms(Bc, p["b_norm"])
+    Cc = _rms(Cc, p["c_norm"])
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])
+    return dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+
+
+def _scan_ssm(dt, Bc, Cc, xin, A, D, h0):
+    """Sequential selective scan. Shapes: dt/xin (B,S,di); Bc/Cc (B,S,n);
+    A (di,n); h0 (B,di,n) f32. Returns (y (B,S,di) f32, hT)."""
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,di),(B,n),(B,n),(B,di)
+        da = jnp.exp(dt_t[..., None] * A)  # (B,di,n)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + D * x_t
+        return h, y
+
+    xs = (
+        dt.transpose(1, 0, 2),
+        Bc.transpose(1, 0, 2),
+        Cc.transpose(1, 0, 2),
+        xin.transpose(1, 0, 2),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), hT
+
+
+def _mix(p, x, cfg: ModelConfig, conv_state, h0):
+    """Shared forward core. Returns (y, conv_state', hT)."""
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xz = logical(xz, "batch", "act_seq", "ssm_inner2")
+    xin, z = jnp.split(xz, [di], axis=-1)
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt, Bc, Cc = _ssm_params(p, xc, cfg)
+    A = -jnp.exp(p["A_log"])
+    S = xc.shape[1]
+    chunk, bd = 64, min(512, di)
+    if (cfg.use_pallas and S > 1 and S % min(chunk, S) == 0 and di % bd == 0):
+        from repro.kernels.ssm_scan.ops import ssm_scan
+
+        y, hT = ssm_scan(xc.astype(jnp.float32), dt, A, Bc, Cc, p["D"], h0,
+                         chunk=min(chunk, S), block_d=bd)
+    else:
+        y, hT = _scan_ssm(dt, Bc, Cc, xc.astype(jnp.float32), A, p["D"], h0)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = logical(y, "batch", "act_seq", "ssm_inner")
+    out = y @ p["out_proj"]
+    return logical(out, "batch", "act_seq", None), conv_state, hT
+
+
+def mamba_train(p, x, cfg: ModelConfig):
+    B = x.shape[0]
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state_dim), jnp.float32)
+    y, _, _ = _mix(p, x, cfg, None, h0)
+    return y
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+def mamba_prefill(p, x, cfg: ModelConfig):
+    B = x.shape[0]
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state_dim), jnp.float32)
+    y, conv_state, hT = _mix(p, x, cfg, None, h0)
+    return y, {"conv": conv_state.astype(jnp.dtype(cfg.dtype)), "ssm": hT}
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig):
+    """x: (B,1,d). Returns (y, cache')."""
+    y, conv_state, hT = _mix(p, x, cfg, cache["conv"].astype(x.dtype), cache["ssm"])
+    return y, {"conv": conv_state.astype(jnp.dtype(cfg.dtype)), "ssm": hT}

@@ -1,0 +1,305 @@
+"""Feed-forward layers: dense (SwiGLU/GeGLU/GeLU) and Mixture-of-Experts.
+
+MoE has three interchangeable implementations (selected by ``cfg.moe_impl``
+and the sharding context):
+
+  * ``dense``    — every token through every expert, gate-weighted sum.
+                   O(E/k) waste; reference semantics for tests.
+  * ``dispatch`` (no mesh) — GShard-style capacity dispatch on one device:
+                   top-k route -> scatter tokens into an (E, C, d) buffer ->
+                   batched expert GEMMs -> gather+combine. Tokens beyond
+                   capacity C are dropped (contribute zero), as in GShard.
+  * ``dispatch`` (mesh)    — the same math inside ``shard_map``:
+      - EP  (num_experts % tp == 0): experts sharded over the "model" axis,
+        tokens exchanged with all_to_all (the classic GShard pipeline).
+      - ETP (otherwise, e.g. mixtral's 8 experts on a 16-wide axis): every
+        device holds a 1/tp slice of every expert's d_ff; tokens are
+        replicated across "model", partial expert outputs are psum-reduced.
+        This is Megatron-style tensor parallelism applied per-expert.
+
+Routing is deterministic (no jitter) so EP/ETP/local/dense agree exactly
+when capacity is not exceeded — property-tested in tests/test_moe.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import act_fn, dense_init
+from repro.models.config import ModelConfig
+from repro.parallel import logical, sharding_ctx
+
+
+def _gated(cfg: ModelConfig) -> bool:
+    return cfg.mlp_type in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff=None):
+    ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if _gated(cfg):
+        p = {
+            "w_gate": dense_init(k1, (d, ff), dtype=dtype),
+            "w_up": dense_init(k2, (d, ff), dtype=dtype),
+            "w_out": dense_init(k3, (ff, d), dtype=dtype),
+        }
+    else:
+        p = {
+            "w_in": dense_init(k1, (d, ff), dtype=dtype),
+            "w_out": dense_init(k3, (ff, d), dtype=dtype),
+        }
+    if cfg.use_bias:
+        p["b_in"] = jnp.zeros((ff,), dtype)
+        p["b_out"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    act = act_fn(cfg.mlp_type)
+    if _gated(cfg):
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_in"]
+        if cfg.use_bias:
+            h = h + p["b_in"]
+        h = act(h)
+    h = logical(h, "batch", "act_seq_mlp", "act_ff")
+    y = h @ p["w_out"]
+    if cfg.use_bias:
+        y = y + p["b_out"]
+    return logical(y, "batch", "act_seq", None)
+
+
+# ---------------------------------------------------------------------------
+# MoE params
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, ko, ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, (d, E), dtype=jnp.float32),
+        "w_gate": dense_init(kg, (E, d, ff), in_axis=1, dtype=dtype),
+        "w_up": dense_init(ku, (E, d, ff), in_axis=1, dtype=dtype),
+        "w_out": dense_init(ko, (E, ff, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(ks, cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing + local dispatch helpers (operate on flat (T, d) tokens)
+
+
+def _route(x2, router, k: int):
+    """Returns (gates (T,k), idx (T,k), probs (T,E)). f32 routing."""
+    logits = x2.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def _aux_loss(probs, idx, E: int):
+    """Switch-style load-balancing loss: E * sum_e f_e * P_e."""
+    assign = jax.nn.one_hot(idx.reshape(-1), E, dtype=jnp.float32)  # (T*k, E)
+    f = assign.mean(0)
+    pmean = probs.mean(0)
+    return E * jnp.sum(f * pmean)
+
+
+def _capacity(T: int, k: int, E: int, cf: float) -> int:
+    return max(1, int(math.ceil(T * k / E * cf)))
+
+
+def _dispatch(x2, gates, idx, E: int, C: int):
+    """Scatter tokens into (E, C, d); returns buffers + bookkeeping."""
+    T, d = x2.shape
+    k = idx.shape[1]
+    e_flat = idx.reshape(-1)  # token-major assignment order
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    prior = jnp.cumsum(onehot, axis=0) - onehot
+    pos_flat = jnp.take_along_axis(prior, e_flat[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos_flat < C
+    slot = jnp.minimum(pos_flat, C - 1)
+    tok_ids = jnp.repeat(jnp.arange(T), k)
+    xk = x2[tok_ids] * keep[:, None].astype(x2.dtype)
+    disp = jnp.zeros((E, C, d), x2.dtype).at[e_flat, slot].add(xk)
+    return disp, (e_flat, slot, keep, tok_ids)
+
+
+def _combine(expert_out, book, gates, T: int):
+    e_flat, slot, keep, tok_ids = book
+    k = gates.shape[1]
+    vals = expert_out[e_flat, slot]  # (T*k, d)
+    w = (keep.astype(jnp.float32) * gates.reshape(-1)).astype(vals.dtype)
+    vals = vals * w[:, None]
+    return vals.reshape(T, k, -1).sum(axis=1)
+
+
+def _expert_ffn(disp, wg, wu, wo, cfg: ModelConfig):
+    act = act_fn(cfg.mlp_type)
+    h = jnp.einsum("ecd,edf->ecf", disp, wg)
+    u = jnp.einsum("ecd,edf->ecf", disp, wu)
+    return jnp.einsum("ecf,efd->ecd", act(h) * u, wo)
+
+
+# ---------------------------------------------------------------------------
+# implementations
+
+
+def _moe_dense(p, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    x2 = x.reshape(-1, d)
+    gates, idx, probs = _route(x2, p["router"], cfg.experts_per_token)
+    E = cfg.num_experts
+    act = act_fn(cfg.mlp_type)
+
+    def one_expert(wg, wu, wo):
+        return (act(x2 @ wg) * (x2 @ wu)) @ wo
+
+    outs = jax.vmap(one_expert)(p["w_gate"], p["w_up"], p["w_out"])  # (E,T,d)
+    gate_mat = jnp.zeros((x2.shape[0], E), jnp.float32)
+    gate_mat = gate_mat.at[jnp.arange(x2.shape[0])[:, None], idx].set(gates)
+    y = jnp.einsum("etd,te->td", outs.astype(jnp.float32), gate_mat)
+    return y.reshape(B, S, d).astype(x.dtype), _aux_loss(probs, idx, E)
+
+
+def _moe_local(p, x, cfg: ModelConfig):
+    B, S, d = x.shape
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    E, k = cfg.num_experts, cfg.experts_per_token
+    gates, idx, probs = _route(x2, p["router"], k)
+    C = _capacity(T, k, E, cfg.capacity_factor)
+    disp, book = _dispatch(x2, gates, idx, E, C)
+    out = _expert_ffn(disp, p["w_gate"], p["w_up"], p["w_out"], cfg)
+    y = _combine(out, book, gates, T)
+    return y.reshape(B, S, d), _aux_loss(probs, idx, E)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _moe_smap(p, x, cfg: ModelConfig, mesh, rules):
+    """shard_map EP / ETP dispatch (see module docstring)."""
+    E, k = cfg.num_experts, cfg.experts_per_token
+    dp = rules.resolve("batch")
+    tp = rules.resolve("moe_tp")
+    seq = rules.resolve("act_seq")
+    tp_size = _axis_size(mesh, tp)
+    all_axes = tuple(mesh.axis_names)
+    use_ep = tp is not None and tp_size > 1 and E % tp_size == 0
+
+    if use_ep:
+        # tokens MUST be sharded across the expert axis: a replicated token
+        # set makes every tp rank dispatch the same tokens and every expert
+        # compute them tp_size x redundantly (measured 16x on jamba train —
+        # EXPERIMENTS.md §Perf-4). If the layout leaves seq unsharded, shard
+        # it over tp here (XLA reshards at the shard_map boundary).
+        seq_ax = seq
+        if seq_ax is None and x.shape[1] % tp_size == 0 and x.shape[1] > 1:
+            seq_ax = tp
+        x_spec = P(dp, seq_ax, None)
+        w_specs = dict(
+            router=P(None, None),
+            w_gate=P(tp, None, None),
+            w_up=P(tp, None, None),
+            w_out=P(tp, None, None),
+        )
+    else:
+        # ETP: each tp rank sees all tokens of its batch shard. If tp spans a
+        # batch axis (weight-stationary decode: ff sharded over data x model)
+        # the tokens must be fully replicated so the psum over tp is correct.
+        tp_axes = (tp,) if isinstance(tp, str) else tuple(tp or ())
+        if isinstance(dp, str):
+            dp_eff = None if dp in tp_axes else dp
+        elif dp is None:
+            dp_eff = None
+        else:
+            dp_eff = tuple(a for a in dp if a not in tp_axes) or None
+        x_spec = P(dp_eff, None, None)
+        w_specs = dict(
+            router=P(None, None),
+            w_gate=P(None, None, tp),
+            w_up=P(None, None, tp),
+            w_out=P(None, tp, None),
+        )
+
+    def body(xl, router, wg, wu, wo):
+        Bl, Sl, d = xl.shape
+        x2 = xl.reshape(-1, d)
+        T = x2.shape[0]
+        gates, idx, probs = _route(x2, router, k)
+        C = _capacity(T, k, E, cfg.capacity_factor)
+        disp, book = _dispatch(x2, gates, idx, E, C)
+        if use_ep:
+            # (E, C, d) -> (E/tp, C*tp, d): exchange tokens to expert owners
+            recv = jax.lax.all_to_all(disp, tp, split_axis=0, concat_axis=1, tiled=True)
+            out = _expert_ffn(recv, wg, wu, wo, cfg)
+            out = jax.lax.all_to_all(out, tp, split_axis=1, concat_axis=0, tiled=True)
+            y = _combine(out, book, gates, T)
+        else:
+            out = _expert_ffn(disp, wg, wu, wo, cfg)  # partial over ff shards
+            y = _combine(out, book, gates, T)
+            if tp is not None and tp_size > 1:
+                y = jax.lax.psum(y.astype(xl.dtype), tp)  # reduce at bf16 width
+        # aux loss must use *globally* averaged f_e and P_e (mean-of-products
+        # over shards != the global product) — pmean the vectors first.
+        assign = jax.nn.one_hot(idx.reshape(-1), E, dtype=jnp.float32).mean(0)
+        f = jax.lax.pmean(assign, all_axes)
+        pm = jax.lax.pmean(probs.mean(0), all_axes)
+        aux = E * jnp.sum(f * pm)
+        return y.reshape(Bl, Sl, d), aux
+
+    y, aux = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, w_specs["router"], w_specs["w_gate"], w_specs["w_up"],
+                  w_specs["w_out"]),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_out"])
+    return y, aux
+
+
+def apply_moe(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss)."""
+    mesh, rules = sharding_ctx()
+    impl = cfg.moe_impl
+    if impl == "auto":
+        impl = "dispatch"
+    if impl == "dense":
+        y, aux = _moe_dense(p, x, cfg)
+    elif mesh is not None and rules is not None:
+        y, aux = _moe_smap(p, x, cfg, mesh, rules)
+    else:
+        y, aux = _moe_local(p, x, cfg)
+    if cfg.shared_expert:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    return logical(y, "batch", "act_seq", None), aux

@@ -1,0 +1,170 @@
+"""RWKV-6 ("Finch") block: data-dependent-decay linear attention, attn-free.
+
+Time-mix (per head of size hd, state S in R^{hd x hd}):
+    y_t = r_t . (S_{t-1} + (u k_t^T) v_t)        (read with bonus u)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (data-dependent decay w_t)
+with w_t = exp(-exp(w0 + tanh(mix_w @ W1) @ W2)) per channel — the Finch
+dynamic decay. Token-shift mixes x_{t-1} into the five projections with
+LoRA-modulated coefficients (the "ddlerp" of the paper).
+
+Channel-mix: token-shifted squared-ReLU MLP with receptance gate.
+
+The pure-jnp path scans over time; ``repro.kernels.rwkv6_scan`` is the
+chunked TPU kernel with identical semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.config import ModelConfig
+from repro.parallel import logical
+
+_TM_LORA = 32  # token-mix lora rank
+_DECAY_LORA = 64
+
+
+def init_rwkv_tm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        "maa_x": jnp.zeros((d,), dtype),
+        "maa_rkvwg": jnp.zeros((5, d), dtype),  # base mix coefs for r,k,v,w,g
+        "tm_w1": dense_init(ks[0], (d, 5 * _TM_LORA), dtype=dtype),
+        "tm_w2": dense_init(ks[1], (5, _TM_LORA, d), in_axis=1, dtype=dtype),
+        "decay_base": jnp.zeros((d,), jnp.float32) - 6.0,  # slow decay at init
+        "decay_w1": dense_init(ks[2], (d, _DECAY_LORA), dtype=dtype),
+        "decay_w2": dense_init(ks[3], (_DECAY_LORA, d), dtype=dtype),
+        "bonus": dense_init(ks[4], (H, hd), in_axis=1, dtype=jnp.float32),
+        "wr": dense_init(ks[5], (d, d), dtype=dtype),
+        "wk": dense_init(ks[6], (d, d), dtype=dtype),
+        "wv": dense_init(ks[7], (d, d), dtype=dtype),
+        "wg": dense_init(ks[8], (d, d), dtype=dtype),
+        "wo": dense_init(ks[9], (d, d), dtype=dtype),
+        "ln_x": jnp.ones((d,), jnp.float32),  # per-head groupnorm scale
+    }
+
+
+def init_rwkv_cm(key, cfg: ModelConfig, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "maa_k": jnp.zeros((d,), dtype),
+        "maa_r": jnp.zeros((d,), dtype),
+        "wk": dense_init(ks[0], (d, ff), dtype=dtype),
+        "wv": dense_init(ks[1], (ff, d), dtype=dtype),
+        "wr": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _shift(x, state):
+    """Shift sequence right by one; state (B,d) fills position 0.
+
+    Returns (shifted, new_state = last token)."""
+    if state is None:
+        state = jnp.zeros((x.shape[0], x.shape[-1]), x.dtype)
+    shifted = jnp.concatenate([state[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted, x[:, -1, :]
+
+
+def _group_norm(x, scale, H, eps=1e-5):
+    """Per-head layernorm over head_dim. x: (B,S,d)."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    y = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, d) * scale).astype(x.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Linear-attention recurrence.
+
+    r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1); u: (H,hd) bonus;
+    s0: (B,H,hd,hd) f32 state (indexed [key_dim, value_dim]).
+    Returns (y (B,S,H,hd) f32, sT).
+    """
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hdk,hdv)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None] [..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def _tm_projections(p, x, shifted):
+    """Data-dependent token-shift mixing -> r,k,v,w,g inputs (each (B,S,d))."""
+    xx = shifted - x
+    xxx = x + xx * p["maa_x"]
+    # (B,S,5*lora) -> (B,S,5,lora) -> per-branch offset (5,B,S,d)
+    sx = jnp.tanh(xxx @ p["tm_w1"])
+    B, S = x.shape[:2]
+    sx = sx.reshape(B, S, 5, _TM_LORA).transpose(2, 0, 1, 3)  # (5,B,S,lora)
+    offs = jnp.einsum("nbsl,nld->nbsd", sx, p["tm_w2"])
+    mixed = x[None] + xx[None] * (p["maa_rkvwg"][:, None, None, :] + offs)
+    return mixed  # (5,B,S,d) order r,k,v,w,g
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, shift_state=None, wkv_state=None):
+    """Returns (y, shift_state', wkv_state')."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    shifted, new_shift = _shift(x, shift_state)
+    mr, mk, mv, mw, mg = _tm_projections(p, x, shifted)
+
+    r = (mr @ p["wr"]).reshape(B, S, H, hd)
+    k = (mk @ p["wk"]).reshape(B, S, H, hd)
+    v = (mv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(mg @ p["wg"])
+    decay = p["decay_base"] + jnp.tanh(mw @ p["decay_w1"]).astype(jnp.float32) @ p[
+        "decay_w2"
+    ].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(B, S, H, hd)
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    chunk = 64
+    if cfg.use_pallas and S > 1 and S % min(chunk, S) == 0:
+        from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+        yk, sT = rwkv6_scan(
+            r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), w.transpose(0, 2, 1, 3),
+            p["bonus"].astype(jnp.float32), wkv_state, chunk=min(chunk, S))
+        y = yk.transpose(0, 2, 1, 3)
+    else:
+        y, sT = _wkv_scan(r, k, v, w, p["bonus"], wkv_state)
+    y = _group_norm(y.reshape(B, S, d).astype(x.dtype), p["ln_x"], H)
+    y = (y * g).astype(x.dtype)
+    out = y @ p["wo"]
+    return logical(out, "batch", "act_seq", None), new_shift, sT
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, shift_state=None):
+    shifted, new_shift = _shift(x, shift_state)
+    xx = shifted - x
+    xk = x + xx * p["maa_k"]
+    xr = x + xx * p["maa_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    h = logical(h, "batch", "act_seq_mlp", "act_ff")
+    y = jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"])
+    return logical(y, "batch", "act_seq", None), new_shift
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "shift_tm": jnp.zeros((batch, d), dt),
+        "shift_cm": jnp.zeros((batch, d), dt),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamW, TrainState  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    dequantize_int8,
+    error_feedback_compress,
+    quantize_int8,
+)

@@ -1,0 +1,125 @@
+"""AdamW in pure JAX with optionally int8-quantized moments.
+
+``moments_dtype="int8"`` stores m and v rowwise-quantized (8-bit-Adam style:
+Dettmers et al.) — 4 bytes/param of optimizer state instead of 8. Required to
+fit jamba-398B (params bf16 + moments int8 = ~6B/param) on a 256-chip v5e pod;
+see EXPERIMENTS.md §Dry-run.
+
+The optimizer is a pytree-to-pytree map: fully elementwise, so FSDP/TP
+sharded params keep their sharding through the update (scales are rowwise —
+max over the last dim only adds a small reduce when that dim is sharded).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compress import dequantize_int8, quantize_int8
+
+
+TrainState = Dict[str, Any]  # {"params": ..., "opt": ..., "step": int32}
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable  # step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moments_dtype: str = "float32"  # float32|int8
+    grad_clip: float = 1.0
+    # error-feedback int8 gradient compression (bandwidth-bound DP): grads
+    # are quantized before the moment update, the quantization error is
+    # carried in state and re-injected next step (8-bit 1-bit-Adam style).
+    error_feedback: bool = False
+
+    # ----------------------------------------------------------------- state
+
+    def _moment_zero(self, p):
+        if self.moments_dtype == "int8":
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(p.shape[:-1] + (1,) if p.ndim else (1,), jnp.float32),
+            }
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def init(self, params):
+        opt = {
+            "m": jax.tree.map(self._moment_zero, params),
+            "v": jax.tree.map(self._moment_zero, params),
+        }
+        if self.error_feedback:
+            opt["ef"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return opt
+
+    def init_state(self, params) -> TrainState:
+        return {"params": params, "opt": self.init(params), "step": jnp.zeros((), jnp.int32)}
+
+    # ---------------------------------------------------------------- update
+
+    def _load(self, mom):
+        if self.moments_dtype == "int8":
+            return dequantize_int8(mom["q"], mom["s"])
+        return mom
+
+    def _store(self, val):
+        if self.moments_dtype == "int8":
+            q, s = quantize_int8(val)
+            return {"q": q, "s": s}
+        return val
+
+    def update(self, grads, opt_state, params, step):
+        """Returns (new_params, new_opt_state)."""
+        new_ef = None
+        if self.error_feedback:
+            from repro.optim.compress import error_feedback_compress
+
+            grads, new_ef = error_feedback_compress(grads, opt_state["ef"])
+        count = step.astype(jnp.float32) + 1.0
+        lr = self.lr(step)
+        c1 = 1.0 - self.b1**count
+        c2 = 1.0 - self.b2**count
+
+        # global-norm clip in f32
+        if self.grad_clip and self.grad_clip > 0:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)))
+            clip = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        else:
+            clip = 1.0
+
+        def one(p, g, m, v):
+            gf = g.astype(jnp.float32) * clip
+            mf = self._load(m)
+            vf = self._load(v)
+            mf = self.b1 * mf + (1 - self.b1) * gf
+            vf = self.b2 * vf + (1 - self.b2) * jnp.square(gf)
+            mh = mf / c1
+            vh = vf / c2
+            upd = mh / (jnp.sqrt(vh) + self.eps)
+            # decoupled weight decay (skip 1-D leaves: norms/biases)
+            if p.ndim >= 2:
+                upd = upd + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, self._store(mf), self._store(vf)
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        is_mom = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+        flat_m = jax.tree.flatten(opt_state["m"], is_leaf=is_mom)[0]
+        flat_v = jax.tree.flatten(opt_state["v"], is_leaf=is_mom)[0]
+        outs = [one(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree.unflatten(tree, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(tree, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(tree, [o[2] for o in outs])
+        new_opt = {"m": new_m, "v": new_v}
+        if new_ef is not None:
+            new_opt["ef"] = new_ef
+        return new_params, new_opt

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_schedule(lr_value: float):
+    def lr(step):
+        return jnp.float32(lr_value)
+
+    return lr

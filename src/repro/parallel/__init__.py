@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ShardingRules,
+    logical,
+    logical_sharding,
+    set_sharding_ctx,
+    sharding_ctx,
+    use_sharding_ctx,
+)

@@ -1,0 +1,379 @@
+"""HLO post-mortem: loop-aware FLOP / byte / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once — it
+does not multiply by trip counts, so a scanned-over-layers model is
+undercounted by ~num_layers x. This module re-derives the three roofline
+inputs by walking the compiled HLO text:
+
+  * computations are split into blocks; while-ops recurse into their body
+    with multiplier x trip_count (recovered from the loop condition's
+    ``constant(N)`` — our scans lower to ``lt(iv, N)``, validated in
+    tests/test_hlo_parse.py against unrolled references);
+  * FLOPs: every ``dot`` contributes 2 * prod(result_shape) * prod(contracted
+    lhs dims) (dots dominate >99% of model FLOPs; convolutions are counted
+    with the same formula; elementwise flops are ignored);
+  * bytes: per op line, result + operand array bytes (fusions count at the
+    fusion boundary — exactly the fused kernel's memory traffic — and are
+    entered only to find dots);
+  * collectives: all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute (sync + async -start), converted to wire bytes with
+    ring factors (all-reduce 2x, others ~1x).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_NAME_RE = re.compile(
+    r"\s(" + "|".join(
+        _COLLECTIVES + ("while", "fusion", "call", "conditional", "dot",
+                        "convolution", "custom-call")
+    ) + r")(-start|-done)?\(")
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_WIRE_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SKIP_BYTES_OPS = (
+    "parameter(", "constant(", "get-tuple-element(", "tuple(", "bitcast(",
+    "after-all(", "partition-id(", "replica-id(",
+)
+
+
+def _shapes_in(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _type_bytes(text: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(s) for dt, s in _shapes_in(text))
+
+
+class HloModule:
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self.result_type: Dict[str, str] = {}  # op name -> result type text
+        self.def_line: Dict[str, str] = {}  # op name -> defining line
+        cur = None
+        for raw in hlo.splitlines():
+            s = raw.strip()
+            if not s or s.startswith("//"):
+                continue
+            # param lists may contain tuple types with nested parens -> greedy
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$", s)
+            if m:
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if s == "}" or s.startswith("} "):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            self.comps[cur].append(s)
+            dm = _DEF_RE.match(s)
+            if dm:
+                # result type = RHS text before the op-name token (op names are
+                # lowercase identifiers directly followed by "(" ; array/tuple
+                # type text never matches that pattern)
+                rhs = dm.group(2)
+                om = re.search(r"(?:^|\s)([a-z][a-z0-9\-]*)\(", rhs)
+                self.result_type[dm.group(1)] = rhs[: om.start()] if om else rhs
+                self.def_line[dm.group(1)] = s
+        if self.entry is None:
+            # fall back: largest computation
+            self.entry = max(self.comps, key=lambda k: len(self.comps[k]))
+        # loop-boundary dataflow: computation (body/cond) -> while init tuple
+        self.loop_init: Dict[str, str] = {}
+        for comp_lines in self.comps.values():
+            for l in comp_lines:
+                wm = re.search(
+                    r"while\(%([\w.\-]+)\).*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", l)
+                if wm:
+                    self.loop_init[wm.group(2)] = wm.group(1)
+                    self.loop_init[wm.group(3)] = wm.group(1)
+        # op name -> computation containing it
+        self.op_comp: Dict[str, str] = {}
+        for cname, comp_lines in self.comps.items():
+            for l in comp_lines:
+                dm = _DEF_RE.match(l)
+                if dm:
+                    self.op_comp[dm.group(1)] = cname
+
+    # -- helpers ------------------------------------------------------------
+
+    def op_result_bytes(self, name: str) -> int:
+        t = self.result_type.get(name)
+        return _type_bytes(t) if t else 0
+
+    def operand_names(self, line: str) -> List[str]:
+        # the first parenthesized group containing %names is the operand list
+        # (tuple-typed results put a type tuple earlier in the line)
+        for m in _OPERAND_RE.finditer(line):
+            names = re.findall(r"%([\w.\-]+)", m.group(1))
+            if names:
+                return names
+        return []
+
+    def operand_shape(self, name: str) -> Optional[Tuple[Tuple[int, ...], str]]:
+        t = self.result_type.get(name)
+        if not t:
+            return None
+        shapes = _shapes_in(t)
+        if not shapes:
+            return None
+        dt, shape = shapes[0]
+        return shape, dt
+
+    def origin_dtype(self, name: str, depth: int = 0) -> str:
+        """Dataflow walk to the *storage* dtype an array originates from,
+        crossing while-loop boundaries (GTE -> param -> while-init -> tuple).
+        Returns a dtype token ("bf16", "f32", ...) or "" when unresolved."""
+        if depth > 64:
+            return ""
+        prod = self.def_line.get(name, "")
+        if not prod:
+            return ""
+        rhs = prod.split("=", 1)[1] if "=" in prod else prod
+        # entry / leaf parameters: the stored dtype itself
+        if " parameter(" in rhs:
+            comp = self.op_comp.get(name, "")
+            init = self.loop_init.get(comp)
+            if init is None:  # entry param: its declared type IS storage
+                shapes = _shapes_in(self.result_type.get(name, ""))
+                return shapes[0][0] if shapes else ""
+            # loop boundary param: resolved via GTE index (handled below by
+            # the caller passing through GTEs); the param itself is a tuple.
+            return self.origin_dtype(init, depth + 1)
+        gm = re.search(r"get-tuple-element\(%([\w.\-]+)\),\s*index=(\d+)", rhs)
+        if gm:
+            src, idx = gm.group(1), int(gm.group(2))
+            src_def = self.def_line.get(src, "")
+            src_rhs = src_def.split("=", 1)[1] if "=" in src_def else src_def
+            if " parameter(" in src_rhs:
+                comp = self.op_comp.get(src, "")
+                init = self.loop_init.get(comp)
+                if init is None:
+                    shapes = _shapes_in(self.result_type.get(src, ""))
+                    return shapes[idx][0] if idx < len(shapes) else ""
+                src_def = self.def_line.get(init, "")
+                src_rhs = src_def.split("=", 1)[1] if "=" in src_def else ""
+                src = init
+            if "tuple(" in src_rhs:
+                elems = self.operand_names(src_def)
+                if idx < len(elems):
+                    return self.origin_dtype(elems[idx], depth + 1)
+            if "while(" in src_rhs:  # GTE of loop result -> init element
+                init_ops = self.operand_names(src_def)
+                if init_ops:
+                    init_def = self.def_line.get(init_ops[0], "")
+                    elems = self.operand_names(init_def)
+                    if idx < len(elems):
+                        return self.origin_dtype(elems[idx], depth + 1)
+            return ""
+        # dtype-preserving / converting plumbing: follow first array operand
+        if any(t in rhs for t in ("convert", "all-gather", "bitcast", "copy(",
+                                  "reshape", "transpose", "fusion(",
+                                  "dynamic-slice", "broadcast", "tuple(")):
+            src = self.operand_names(prod)
+            if src:
+                return self.origin_dtype(src[0], depth + 1)
+        shapes = _shapes_in(self.result_type.get(name, ""))
+        return shapes[0][0] if shapes else ""
+
+    def native_wire_factor(self, line: str) -> float:
+        """XLA:CPU upcasts bf16 dots to f32, dragging weight all-gathers to
+        f32 width — a backend artifact (TPU gathers stay bf16). When an f32
+        collective's operand *originates* from bf16/f16 storage (dataflow
+        walk incl. loop boundaries), scale wire bytes by 0.5."""
+        ops = self.operand_names(line)
+        if not ops:
+            return 1.0
+        if "f32" not in self.result_type.get(ops[0], ""):
+            return 1.0
+        origin = self.origin_dtype(ops[0])
+        return 0.5 if origin in ("bf16", "f16") else 1.0
+
+    def trip_count(self, cond: str) -> int:
+        consts = []
+        for line in self.comps.get(cond, []):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+
+def _dot_flops(mod: HloModule, line: str) -> float:
+    # result shape
+    dm = _DEF_RE.match(line)
+    if not dm:
+        return 0.0
+    res_shapes = _shapes_in(dm.group(2).split(" dot(")[0].split(" convolution(")[0])
+    if not res_shapes:
+        return 0.0
+    _, res = res_shapes[0]
+    out_elems = math.prod(res)
+    cm = _LHS_CDIMS_RE.search(line)
+    k = 1
+    if cm is not None:
+        cdims = [int(x) for x in cm.group(1).split(",") if x]
+        lhs_ops = mod.operand_names(line)
+        if lhs_ops:
+            sh = mod.operand_shape(lhs_ops[0])
+            if sh is not None:
+                lhs_shape, _ = sh
+                for d in cdims:
+                    if d < len(lhs_shape):
+                        k *= lhs_shape[d]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    """Loop-aware {flops, bytes, collectives{...}, top_ops} per device/step."""
+    mod = HloModule(hlo)
+    flops = 0.0
+    bytes_accessed = 0.0  # upper bound: every op at this backend's fusion granularity
+    bytes_min = 0.0  # lower bound: dot/collective/slice traffic only (perfect fusion)
+    coll: Dict[str, float] = defaultdict(float)
+    coll_native = 0.0  # wire bytes at native (pre-CPU-upcast) dtype widths
+    top: List[Tuple[float, str, str]] = []
+    top_dots: List[Tuple[float, str]] = []
+    visited_guard = 0
+
+    def line_bytes(line: str) -> float:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            return 0.0
+        rhs = dm.group(2)
+        om = re.search(r"(?:^|\s)([a-z][a-z0-9\-]*)\(", rhs)
+        res = float(_type_bytes(rhs[: om.start()] if om else rhs))
+        op_bytes = [float(mod.op_result_bytes(o)) for o in mod.operand_names(line)]
+        name = dm.group(1)
+        # in-place scan-stack writes: the big buffer is aliased operand+result;
+        # true traffic is ~2x the update slice, not 2x the buffer.
+        if "dynamic-update-slice" in name or "dynamic-update-slice" in rhs[:40]:
+            big = max(op_bytes, default=0.0)
+            if big >= res * 0.5:
+                small = sum(op_bytes) - big
+                return 2.0 * small
+        # slice reads from a stacked buffer: traffic ~2x the slice.
+        if "dynamic-slice" in name or rhs.lstrip().startswith("dynamic-slice"):
+            return 2.0 * res
+        return res + sum(op_bytes)
+
+    def walk(comp: str, mult: float, flops_only: bool, depth: int):
+        nonlocal flops, bytes_accessed, bytes_min, coll_native, visited_guard
+        visited_guard += 1
+        if depth > 24 or comp not in mod.comps or visited_guard > 2_000_000:
+            return
+        for line in mod.comps[comp]:
+            om = _OP_NAME_RE.search(line)
+            op = om.group(1) if om else None
+            if op in ("dot", "convolution"):
+                f = _dot_flops(mod, line) * mult
+                flops += f
+                top_dots.append((f, line[:180]))
+                if not flops_only:
+                    b = line_bytes(line) * mult
+                    bytes_accessed += b
+                    bytes_min += b
+                continue
+            if op == "while":
+                wm = _WHILE_ATTR_RE.search(line)
+                if wm:
+                    trips = mod.trip_count(wm.group(1))
+                    walk(wm.group(2), mult * trips, flops_only, depth + 1)
+                continue
+            if op in _COLLECTIVES:
+                if om.group(2) == "-done":
+                    continue
+                if not flops_only:
+                    best = 0
+                    dm = _DEF_RE.match(line)
+                    if dm:
+                        best = _type_bytes(dm.group(2).split(" ")[0])
+                        for o in mod.operand_names(line):
+                            best = max(best, mod.op_result_bytes(o))
+                    b = best * _WIRE_FACTOR[op] * mult
+                    coll[op] += b
+                    coll_native += b * mod.native_wire_factor(line)
+                    bytes_min += best * mult  # buffers also touch HBM
+                    top.append((b, op, line[:200]))
+                continue
+            if op == "fusion":
+                if not flops_only:
+                    bytes_accessed += line_bytes(line) * mult
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    walk(cm.group(1), mult, True, depth + 1)  # dots only
+                continue
+            if op in ("call", "conditional"):
+                for name in _CALLS_RE.findall(line) + _TO_APPLY_RE.findall(line):
+                    walk(name, mult, flops_only, depth + 1)
+                targets = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if targets:
+                    for name in re.findall(r"%([\w.\-]+)", targets.group(1)):
+                        walk(name, mult, flops_only, depth + 1)
+                if not flops_only:
+                    bytes_accessed += line_bytes(line) * mult
+                continue
+            if op == "custom-call":
+                if not flops_only:
+                    bytes_accessed += line_bytes(line) * mult
+                continue
+            if flops_only:
+                continue
+            if any(t in line for t in _SKIP_BYTES_OPS):
+                continue
+            bytes_accessed += line_bytes(line) * mult
+
+    walk(mod.entry, 1.0, False, 0)
+    top.sort(key=lambda t: -t[0])
+    top_dots.sort(key=lambda t: -t[0])
+    out: Dict[str, object] = {
+        "top_dots": [{"flops": f, "hlo": l} for f, l in top_dots[:12]],
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "bytes_min": bytes_min,
+        "collectives": dict(coll),
+        "collective_total": float(sum(coll.values())),
+        "collective_total_native": coll_native,
+        "top_ops": [{"bytes": b, "op": op, "hlo": l} for b, op, l in top[:12]],
+    }
+    return out
+
+
+def collective_bytes(hlo: str) -> Dict[str, object]:
+    """Back-compat wrapper: collective subtotals + total + top_ops."""
+    a = analyze(hlo)
+    out = dict(a["collectives"])
+    out["total"] = a["collective_total"]
+    out["top_ops"] = a["top_ops"]
+    return out

@@ -1,0 +1,310 @@
+"""Sharding layouts: logical-axis rule tables per (layout, step kind) and
+PartitionSpec trees for params and caches.
+
+Layouts (selected per arch in its config; see DESIGN.md §5):
+
+  cp_fsdp — context parallelism + FSDP. Activations are sequence-sharded over
+            "model" (works for any head count, incl. 56H/8KV archs that don't
+            divide a 16-wide axis); weights are stored d_model-sharded over
+            the DP axes and vocab/ff/head-sharded over "model" (FSDP storage,
+            gathered per scanned block).
+  tp      — Megatron-style tensor parallelism: heads/ff/inner sharded over
+            "model", sequence unsharded (required by SSM/RWKV recurrences and
+            by head-TP attention); FSDP storage over DP axes.
+  tp_ffn  — TP only for the FFN/channel-mix (RWKV: 40 heads don't divide 16,
+            time-mix compute is replicated, weights FSDP-stored).
+
+Step kinds: "train"/"prefill" use the layout's compute rules; "decode" shards
+the KV-cache length over "model" (flash-decode style — XLA inserts the
+softmax max/sum all-reduces), falling back to all-axes cache sharding when
+the batch can't cover the DP axes (long_500k's batch=1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardingRules
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _weight_rules(mesh: Mesh, cfg: ModelConfig) -> Dict[str, Any]:
+    """Storage sharding for weights — common to all layouts."""
+    dp = dp_axes(mesh)
+    tp_size = mesh.shape["model"]
+    ep_ok = cfg.num_experts > 0 and cfg.num_experts % tp_size == 0
+    return {
+        "w_dmodel": dp,
+        "w_vocab": "model",
+        "w_heads": "model",
+        "w_kv": "model",
+        "w_ff": None if ep_ok else "model",  # EP: full expert per device
+        "w_expert": "model" if ep_ok else None,
+        "w_inner": "model",
+        "w_inner2": "model",
+    }
+
+
+def layout_rules(mesh: Mesh, cfg: ModelConfig, step_kind: str,
+                 global_batch: Optional[int] = None,
+                 layout: Optional[str] = None) -> ShardingRules:
+    layout = layout or cfg.layout
+    dp = dp_axes(mesh)
+    rules: Dict[str, Any] = dict(_weight_rules(mesh, cfg))
+    rules["moe_tp"] = "model"
+
+    if step_kind == "decode":
+        batch_ok = global_batch is not None and global_batch % axis_size(mesh, dp) == 0
+        batch = dp if batch_ok else None
+        cache = "model" if batch_ok else tuple(mesh.axis_names)
+        rules.update(
+            batch=batch,
+            act_seq=None,
+            act_kv_seq=None,
+            act_seq_mlp=None,
+            heads=None,
+            kv_heads=None,
+            act_ff="model",
+            vocab=None,
+            cache_len=cache,
+            ssm_inner="model",
+            ssm_inner2="model",
+        )
+        if layout == "decode_ws":
+            # Weight-stationary decode (beyond-paper, §Perf-3): weights live
+            # permanently in their compute sharding — no per-token FSDP
+            # gathers. Dense/attention weights shard output dims over
+            # "model"; MoE experts go expert-TP over the FULL device grid
+            # (ff over data x model, tokens broadcast inside the MoE block —
+            # activations are KBs, weights are GBs at decode).
+            rules.update(
+                w_dmodel=None,
+                w_heads="model",
+                w_kv="model",
+                w_ff=("data", "model") if cfg.num_experts else "model",
+                w_expert=None,
+                w_inner="model",
+                w_inner2="model",
+                w_vocab="model",
+                vocab="model",
+                moe_tp=("data", "model"),
+            )
+        return ShardingRules(rules)
+
+    if layout == "fsdp":
+        # pure FSDP: batch over every mesh axis when divisible (falls back to
+        # DP axes); attention/MLP fully local — no CP/TP collectives, only
+        # per-block weight gathers + gradient reduction.
+        all_axes = tuple(mesh.axis_names)
+        batch_all = (global_batch is not None
+                     and global_batch % axis_size(mesh, all_axes) == 0)
+        rules.update(
+            batch=all_axes if batch_all else dp,
+            act_seq=None,
+            act_kv_seq=None,
+            act_seq_mlp=None,
+            heads=None,
+            kv_heads=None,
+            act_ff=None,
+            vocab=None,
+            cache_len=None,
+            ssm_inner=None,
+            ssm_inner2=None,
+        )
+        return ShardingRules(rules)
+
+    if layout == "cp_fsdp":
+        rules.update(
+            batch=dp,
+            act_seq="model",
+            act_kv_seq=None,
+            act_seq_mlp="model",
+            heads=None,
+            kv_heads=None,
+            act_ff=None,
+            vocab=None,
+            cache_len="model",
+            ssm_inner=None,
+            ssm_inner2=None,
+        )
+    elif layout == "tp":
+        rules.update(
+            batch=dp,
+            act_seq=None,
+            act_kv_seq=None,
+            act_seq_mlp=None,
+            heads="model",
+            kv_heads=None,
+            act_ff="model",
+            vocab="model",
+            cache_len="model",
+            ssm_inner="model",
+            ssm_inner2="model",
+        )
+    elif layout == "tp_ffn":
+        rules.update(
+            batch=dp,
+            act_seq=None,
+            act_kv_seq=None,
+            act_seq_mlp=None,
+            heads=None,
+            kv_heads=None,
+            act_ff="model",
+            vocab="model",
+            cache_len="model",
+            ssm_inner=None,
+            ssm_inner2=None,
+        )
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    return ShardingRules(rules)
+
+
+# ---------------------------------------------------------------------------
+# params / cache PartitionSpec trees
+
+# (parent, leaf) -> logical axes; parent "" matches any. Leading n_blocks dim
+# for leaves under "blocks" is prepended automatically.
+_LEAF_AXES = {
+    ("", "embed"): ("w_vocab", "w_dmodel"),
+    ("", "lm_head"): ("w_dmodel", "w_vocab"),
+    ("attn", "wq"): ("w_dmodel", "w_heads"),
+    ("attn", "wk"): ("w_dmodel", "w_kv"),
+    ("attn", "wv"): ("w_dmodel", "w_kv"),
+    ("attn", "wo"): ("w_heads", "w_dmodel"),
+    ("attn", "bq"): ("w_heads",),
+    ("attn", "bk"): ("w_kv",),
+    ("attn", "bv"): ("w_kv",),
+    ("attn", "bo"): (None,),
+    ("mlp", "w_gate"): ("w_dmodel", "w_ff_dense"),
+    ("mlp", "w_up"): ("w_dmodel", "w_ff_dense"),
+    ("mlp", "w_in"): ("w_dmodel", "w_ff_dense"),
+    ("mlp", "w_out"): ("w_ff_dense", "w_dmodel"),
+    ("mlp", "b_in"): ("w_ff_dense",),
+    ("mlp", "b_out"): (None,),
+    ("shared", "w_gate"): ("w_dmodel", "w_ff_dense"),
+    ("shared", "w_up"): ("w_dmodel", "w_ff_dense"),
+    ("shared", "w_out"): ("w_ff_dense", "w_dmodel"),
+    ("moe", "router"): ("w_dmodel", None),
+    ("moe", "w_gate"): ("w_expert", "w_dmodel", "w_ff"),
+    ("moe", "w_up"): ("w_expert", "w_dmodel", "w_ff"),
+    ("moe", "w_out"): ("w_expert", "w_ff", "w_dmodel"),
+    ("mamba", "in_proj"): ("w_dmodel", "w_inner2"),
+    ("mamba", "conv_w"): (None, "w_inner"),
+    ("mamba", "conv_b"): ("w_inner",),
+    ("mamba", "x_proj"): ("w_inner", None),
+    ("mamba", "dt_proj"): (None, "w_inner"),
+    ("mamba", "dt_bias"): ("w_inner",),
+    ("mamba", "A_log"): ("w_inner", None),
+    ("mamba", "D"): ("w_inner",),
+    ("mamba", "out_proj"): ("w_inner", "w_dmodel"),
+    ("tm", "tm_w1"): ("w_dmodel", None),
+    ("tm", "tm_w2"): (None, None, "w_dmodel"),
+    ("tm", "decay_w1"): ("w_dmodel", None),
+    ("tm", "decay_w2"): (None, "w_dmodel"),
+    ("tm", "wr"): ("w_dmodel", None),
+    ("tm", "wk"): ("w_dmodel", None),
+    ("tm", "wv"): ("w_dmodel", None),
+    ("tm", "wg"): ("w_dmodel", None),
+    ("tm", "wo"): ("w_dmodel", None),
+    ("cm", "wk"): ("w_dmodel", "w_ff_dense"),
+    ("cm", "wv"): ("w_ff_dense", "w_dmodel"),
+    ("cm", "wr"): ("w_dmodel", None),
+}
+
+
+def _leaf_axes(path, leaf) -> Tuple:
+    keys = [p.key for p in path if hasattr(p, "key")]
+    name = keys[-1] if keys else ""
+    parent = keys[-2] if len(keys) >= 2 else ""
+    # dense-FFN w_ff should shard over "model" in every layout; MoE w_ff is
+    # layout-dependent (EP vs ETP). Map the dense alias here.
+    spec = _LEAF_AXES.get((parent, name))
+    if spec is None:
+        spec = _LEAF_AXES.get(("", name))
+    if spec is None:
+        spec = (None,) * leaf.ndim  # norms, scalar leaves, misc
+    in_blocks = "blocks" in keys
+    if in_blocks:
+        spec = (None,) + tuple(spec)
+    if len(spec) != leaf.ndim:
+        spec = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        spec = spec[: leaf.ndim]
+    return spec
+
+
+def param_specs(params_shape, mesh: Mesh, rules: ShardingRules):
+    """PartitionSpec tree matching the params tree."""
+    rules = rules.with_overrides(w_ff_dense="model")
+
+    def one(path, leaf):
+        axes = _leaf_axes(path, leaf)
+        resolved = []
+        for ax, dim in zip(axes, leaf.shape):
+            phys = rules.resolve(ax)
+            if phys is not None and dim % axis_size(mesh, phys) != 0:
+                phys = None  # non-divisible: replicate this dim
+            resolved.append(phys)
+        return P(*resolved)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def cache_specs(model, mesh: Mesh, rules: ShardingRules, batch: int, max_len: int):
+    """PartitionSpec tree matching model.init_cache structure."""
+    shapes = model.cache_shape(batch, max_len)
+
+    def entry_spec(j, shapes_entry):
+        spec = model.specs[j]
+        out = {}
+        if spec.mixer == "attn":
+            out["k"] = P(None, rules.resolve("batch"), rules.resolve("cache_len"),
+                         rules.resolve("kv_heads"), None)
+            out["v"] = out["k"]
+            out["pos"] = P(None, rules.resolve("cache_len"))
+        elif spec.mixer == "mamba":
+            out["conv"] = P(None, rules.resolve("batch"), None, rules.resolve("ssm_inner"))
+            out["ssm"] = P(None, rules.resolve("batch"), rules.resolve("ssm_inner"), None)
+        else:  # rwkv
+            out["shift_tm"] = P(None, rules.resolve("batch"), None)
+            out["shift_cm"] = P(None, rules.resolve("batch"), None)
+            out["wkv"] = P(None, rules.resolve("batch"), None, None, None)
+        return out
+
+    specs = [entry_spec(j, s) for j, s in enumerate(shapes)]
+
+    # drop sharding on non-divisible dims
+    def fix(spec_leaf, shape_leaf):
+        resolved = []
+        for ax, dim in zip(spec_leaf, shape_leaf.shape):
+            if ax is not None and dim % axis_size(mesh, ax) != 0:
+                ax = None
+            resolved.append(ax)
+        return P(*resolved)
+
+    return jax.tree.map(fix, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,91 @@
+"""Logical-axis sharding: MaxText-style indirection between model code and meshes.
+
+Model code annotates tensors with *logical* axis names ("batch", "act_seq",
+"act_ff", "cache_len", ...). A ``ShardingRules`` table maps logical names to
+physical mesh axes. Different *layouts* (cp_fsdp, tp_sp, ep, ...) are just
+different rule tables, so the same model code runs under every parallelism
+strategy — including none (no mesh context => annotations are no-ops), which
+is what smoke tests on a single CPU device use.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to physical mesh axes (or None)."""
+
+    rules: Mapping[str, MeshAxes] = field(default_factory=dict)
+
+    def resolve(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        return self.rules.get(name, None)
+
+    def spec(self, names: Sequence[Optional[str]]) -> P:
+        return P(*(self.resolve(n) for n in names))
+
+    def with_overrides(self, **overrides: MeshAxes) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return ShardingRules(merged)
+
+
+class _Ctx(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+def set_sharding_ctx(mesh: Optional[Mesh], rules: Optional[ShardingRules]) -> None:
+    _CTX.mesh = mesh
+    _CTX.rules = rules
+
+
+def sharding_ctx() -> Tuple[Optional[Mesh], Optional[ShardingRules]]:
+    return _CTX.mesh, _CTX.rules
+
+
+@contextlib.contextmanager
+def use_sharding_ctx(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    prev = sharding_ctx()
+    set_sharding_ctx(mesh, rules)
+    try:
+        yield
+    finally:
+        set_sharding_ctx(*prev)
+
+
+def logical_sharding(names: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    """NamedSharding for the current context, or None outside any context."""
+    mesh, rules = sharding_ctx()
+    if mesh is None or rules is None:
+        return None
+    return NamedSharding(mesh, rules.spec(names))
+
+
+def logical(x: Any, *names: Optional[str]) -> Any:
+    """Constrain an intermediate to its logical sharding (no-op w/o context).
+
+    ``names`` has one entry per dim of ``x``; trailing dims may be omitted
+    (treated as replicated).
+    """
+    mesh, rules = sharding_ctx()
+    if mesh is None or rules is None:
+        return x
+    padded = list(names) + [None] * (x.ndim - len(names))
+    spec = rules.spec(padded[: x.ndim])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,219 @@
+"""Elastic serving fleet — the CloudCoaster runtime mapping at pod level.
+
+Replicas are TPU pod slices serving autoregressive decode. A replica pinned
+by a long job (training / batch work) is "busy with a long task"; inference
+requests are short tasks. The controller (repro.core.controller — the same
+policy object the paper simulator uses) watches
+l_r = pinned / total and rents transient replicas against the budget
+K = r * N_s * p; removals drain (finish queued requests, take no new ones).
+
+The fleet advances in ticks (1 tick = 1 decode step = one token for every
+active replica). ``decode_fn`` can be a real jitted model decode step — the
+examples run a reduced model for true end-to-end serving; tests omit it for
+speed (identical scheduling semantics either way).
+
+Hedging (paper §3.3 transient-safety rule): a request whose time on a
+transient replica exceeds ``hedge_factor x gen_len`` ticks is duplicated onto
+the on-demand reserve; first completion wins. Revocations take a transient
+replica (and its queue) away instantly; queued requests are re-routed.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig, FleetView, desired_delta
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: int
+    gen_len: int
+    start: Optional[int] = None
+    finish: Optional[int] = None
+    hedged: bool = False
+
+    @property
+    def wait(self) -> Optional[int]:
+        return None if self.start is None else self.start - self.arrival
+
+
+@dataclass
+class _Replica:
+    rid: int
+    kind: str  # ondemand | transient
+    queue: deque = field(default_factory=deque)
+    active: Optional[Request] = None
+    tokens_left: int = 0
+    pinned: bool = False  # long job occupies this replica
+    draining: bool = False
+    online_at: int = 0
+    offline_at: Optional[int] = None
+
+    @property
+    def load(self) -> int:
+        return len(self.queue) + (1 if self.active else 0)
+
+
+class ElasticServingFleet:
+    def __init__(self, n_ondemand: int, *, threshold: float = 0.75,
+                 max_transient: int = 0, provisioning_delay: int = 60,
+                 hedge_factor: float = 4.0,
+                 decode_fn: Optional[Callable] = None,
+                 revocation_mttf_ticks: float = 0.0, seed: int = 0):
+        self.ctrl = ControllerConfig(threshold, max_transient)
+        self.provisioning_delay = provisioning_delay
+        self.hedge_factor = hedge_factor
+        self.decode_fn = decode_fn
+        self.rng = np.random.default_rng(seed)
+        self.revocation_mttf = revocation_mttf_ticks
+        self.replicas: List[_Replica] = [
+            _Replica(i, "ondemand") for i in range(n_ondemand)]
+        self.pending_online: List[int] = []  # ticks at which transients arrive
+        self.lifetimes: List[int] = []
+        self.n_revocations = 0
+        self.n_hedges = 0
+        self._next_rid = n_ondemand
+        self._active_area = 0.0
+        self._ticks = 0
+
+    # ------------------------------------------------------------- internals
+
+    def _stable(self) -> List[_Replica]:
+        return [r for r in self.replicas
+                if r.offline_at is None and not r.draining]
+
+    def _transients(self) -> List[_Replica]:
+        return [r for r in self._stable() if r.kind == "transient"]
+
+    def _route(self, req: Request):
+        cands = [r for r in self._stable() if not r.pinned]
+        if not cands:  # everything pinned: queue on least loaded on-demand
+            cands = [r for r in self.replicas
+                     if r.offline_at is None and r.kind == "ondemand"]
+        tgt = min(cands, key=lambda r: r.load)
+        tgt.queue.append(req)
+
+    def _controller_tick(self, t: int):
+        stable = self._stable()
+        pinned = sum(1 for r in stable if r.pinned)
+        view = FleetView(
+            n_long_busy=pinned,
+            n_online_stable=len(stable),
+            n_draining=sum(1 for r in self.replicas
+                           if r.draining and r.offline_at is None),
+            n_pending=len(self.pending_online),
+            n_active_transient=len(self._transients()),
+        )
+        delta = desired_delta(view, self.ctrl)
+        for _ in range(max(delta, 0)):
+            self.pending_online.append(t + self.provisioning_delay)
+        for _ in range(max(-delta, 0)):
+            tr = min(self._transients(), key=lambda r: r.load)
+            tr.draining = True
+
+    def _advance_replica(self, r: _Replica, t: int):
+        if r.pinned:
+            return
+        if r.active is None and r.queue:
+            r.active = r.queue.popleft()
+            if r.active.start is None:
+                r.active.start = t
+            r.tokens_left = r.active.gen_len
+        if r.active is not None:
+            if self.decode_fn is not None:
+                self.decode_fn(r.rid)
+            r.tokens_left -= 1
+            if r.tokens_left <= 0:
+                if r.active.finish is None:
+                    r.active.finish = t + 1
+                r.active = None
+        if r.draining and r.active is None and not r.queue:
+            r.offline_at = t
+            self.lifetimes.append(t - r.online_at)
+
+    def _maybe_hedge(self, t: int):
+        reserve = [r for r in self._stable()
+                   if r.kind == "ondemand" and not r.pinned]
+        if not reserve:
+            return
+        for r in self._transients():
+            for req in list(r.queue):
+                if (not req.hedged
+                        and t - req.arrival > self.hedge_factor * req.gen_len):
+                    req.hedged = True
+                    self.n_hedges += 1
+                    r.queue.remove(req)
+                    min(reserve, key=lambda x: x.load).queue.append(req)
+
+    def _maybe_revoke(self, t: int):
+        if self.revocation_mttf <= 0:
+            return
+        for r in list(self._transients()):
+            if self.rng.random() < 1.0 / self.revocation_mttf:
+                self.n_revocations += 1
+                r.offline_at = t
+                self.lifetimes.append(t - r.online_at)
+                requeue = list(r.queue) + ([r.active] if r.active else [])
+                r.queue.clear()
+                r.active = None
+                for req in requeue:
+                    req.start = None  # restarts from scratch elsewhere
+                    self._route(req)
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, requests: List[Request], pinned_fn: Callable[[int], int],
+            max_ticks: int):
+        """``pinned_fn(t)`` -> number of on-demand replicas pinned by long
+        jobs at tick t (the training-fleet occupancy signal)."""
+        by_arrival: Dict[int, List[Request]] = {}
+        for q in requests:
+            by_arrival.setdefault(q.arrival, []).append(q)
+        for t in range(max_ticks):
+            # long-job occupancy on the on-demand fleet
+            want = min(pinned_fn(t), len(self.replicas))
+            ond = [r for r in self.replicas
+                   if r.kind == "ondemand" and r.offline_at is None]
+            for i, r in enumerate(ond):
+                r.pinned = i < want
+            # transient arrivals
+            for due in [x for x in self.pending_online if x <= t]:
+                self.pending_online.remove(due)
+                nr = _Replica(self._next_rid, "transient", online_at=t)
+                self._next_rid += 1
+                self.replicas.append(nr)
+            # new requests
+            for req in by_arrival.get(t, ()):  # route at arrival tick
+                self._route(req)
+            self._controller_tick(t)
+            self._maybe_revoke(t)
+            self._maybe_hedge(t)
+            for r in self.replicas:
+                if r.offline_at is None:
+                    self._advance_replica(r, t)
+            self._active_area += len(self._transients())
+            self._ticks += 1
+        return self.summary(requests)
+
+    def summary(self, requests: List[Request]) -> Dict[str, float]:
+        waits = [q.wait for q in requests if q.wait is not None]
+        done = [q for q in requests if q.finish is not None]
+        return {
+            "n_requests": len(requests),
+            "n_done": len(done),
+            "avg_wait": float(np.mean(waits)) if waits else float("inf"),
+            "p99_wait": float(np.percentile(waits, 99)) if waits else float("inf"),
+            "max_wait": float(np.max(waits)) if waits else float("inf"),
+            "avg_active_transients": self._active_area / max(self._ticks, 1),
+            "n_transients_used": len([r for r in self.replicas
+                                      if r.kind == "transient"]),
+            "avg_lifetime_ticks": float(np.mean(self.lifetimes)) if self.lifetimes else 0.0,
+            "n_revocations": self.n_revocations,
+            "n_hedges": self.n_hedges,
+        }

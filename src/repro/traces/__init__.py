@@ -1,0 +1,1 @@
+from repro.traces.synthetic import google_like, yahoo_like  # noqa: F401

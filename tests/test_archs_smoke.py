@@ -1,0 +1,100 @@
+"""Deliverable (f): per-arch smoke tests — reduced config of the same family,
+one forward + one optimizer step on CPU, asserting shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.data import SyntheticBatches
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.models.config import block_structure
+from repro.optim import AdamW
+from repro.optim.schedule import constant_schedule
+
+B, S = 2, 32
+
+
+def _batch(cfg, seed=0):
+    return {k: jnp.asarray(v)
+            for k, v in SyntheticBatches(cfg, B, S, seed=seed).batch(0).items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    if cfg.family == "audio":
+        logits, aux = model.forward(params, embeds=batch["embeds"])
+        exp_len = S
+    elif cfg.family == "vlm":
+        logits, aux = model.forward(params, tokens=batch["tokens"],
+                                    prefix_embeds=batch["prefix_embeds"])
+        exp_len = S  # prefix + text
+    else:
+        logits, aux = model.forward(params, tokens=batch["tokens"])
+        exp_len = S
+    assert logits.shape == (B, exp_len, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+    assert bool(jnp.isfinite(aux)), "NaN/inf in aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    opt = AdamW(lr=constant_schedule(1e-3), moments_dtype=cfg.opt_moments_dtype)
+    step = make_train_step(model, opt, num_microbatches=1)
+    state = opt.init_state(model.init(jax.random.PRNGKey(0)))
+    state2, metrics = jax.jit(step)(state, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state2["step"]) == 1
+    # params actually moved
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     state["params"], state2["params"])
+    assert max(jax.tree.leaves(d)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_is_exact(arch):
+    """The FULL config matches the assignment numbers (lowered only via the
+    dry-run; here we check the declared hyperparameters + block structure)."""
+    cfg = get_config(arch)
+    expected = {
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    block_structure(cfg)  # patterns must divide num_layers
+
+
+def test_param_counts_match_names():
+    """Sanity: total/active param counts are in the advertised ballparks."""
+    expected = {
+        "deepseek-coder-33b": (33e9, None),
+        "yi-34b": (34e9, None),
+        "jamba-1.5-large-398b": (398e9, 94e9),
+        "mixtral-8x22b": (141e9, 39e9),
+        "llama4-scout-17b-a16e": (109e9, 17e9),
+    }
+    for arch, (tot, act) in expected.items():
+        m = build_model(get_config(arch))
+        assert abs(m.param_count() - tot) / tot < 0.12, (
+            arch, m.param_count())
+        if act:
+            assert abs(m.active_param_count() - act) / act < 0.2, (
+                arch, m.active_param_count())

@@ -1,0 +1,84 @@
+"""Continuous-batching engine: real-model correctness + slot reuse."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.runtime.batching import ContinuousBatcher, GenRequest
+
+
+def _setup():
+    cfg = smoke_config("starcoder2-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, prompt, n_new, max_len):
+    logits, cache = model.prefill(params, tokens=jnp.asarray(prompt)[None],
+                                  max_len=max_len)
+    toks = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    for i in range(n_new - 1):
+        logits, cache = model.decode_step(
+            params, cache, tokens=jnp.asarray([[toks[-1]]], jnp.int32),
+            pos=jnp.int32(pos + i))
+        toks.append(int(jnp.argmax(logits[0])))
+    return toks
+
+
+def test_batched_generation_matches_sequential():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=p).astype(np.int32)
+               for p in (8, 8, 8, 8)]
+    eng = ContinuousBatcher(model, params, max_slots=2, max_len=64)
+    reqs = [GenRequest(i, p, max_new=6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r, p in zip(reqs, prompts):
+        ref = _greedy_reference(model, params, p, 6, 64)
+        assert r.tokens == ref, (r.rid, r.tokens, ref)
+        assert r.finish_step is not None
+
+
+def test_slot_reuse_no_cross_contamination():
+    """A request admitted into a freed slot must not see the previous
+    occupant's KV entries."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(1)
+    a = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    b = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    # run b alone
+    eng1 = ContinuousBatcher(model, params, max_slots=1, max_len=64)
+    rb1 = GenRequest(0, b, max_new=5)
+    eng1.submit(rb1)
+    eng1.run()
+    # run a then b through the same single slot
+    eng2 = ContinuousBatcher(model, params, max_slots=1, max_len=64)
+    ra = GenRequest(0, a, max_new=5)
+    rb2 = GenRequest(1, b, max_new=5)
+    eng2.submit(ra)
+    eng2.submit(rb2)
+    eng2.run()
+    assert rb2.tokens == rb1.tokens
+    assert rb2.start_step > ra.start_step  # queued behind a
+
+
+def test_occupancy_and_waits_reported():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(2)
+    eng = ContinuousBatcher(model, params, max_slots=2, max_len=64)
+    reqs = [GenRequest(i, rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                       max_new=4) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert eng.occupancy == 1.0  # both slots busy, 3 queued
+    eng.run()
+    waits = [r.wait for r in reqs]
+    assert all(w is not None for w in waits)
+    assert max(waits) > 0  # someone queued

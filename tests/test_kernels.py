@@ -1,0 +1,224 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose against the
+pure-jnp ref oracles (kernels run interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+NEG_INF = -2.3819763e38
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------- flash attn
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 4, 4, 128, 64),   # MHA
+    (2, 4, 2, 256, 64),   # GQA
+    (1, 8, 1, 128, 128),  # MQA, MXU-width head
+    (1, 2, 2, 192, 32),   # non-pow2 seq (divisible by block 64)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(B, H, KV, S, hd, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, S, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, hd)), dtype)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    o_ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(window=32), dict(window=64), dict(softcap=30.0),
+    dict(prefix_len=24), dict(window=48, softcap=20.0),
+])
+def test_flash_attention_variants(kwargs):
+    rng = np.random.default_rng(1)
+    B, H, KV, S, hd = 2, 4, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, **kwargs)
+    o_ref = attention_ref(q, k, v, causal=True, **kwargs)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    rng = np.random.default_rng(2)
+    B, H, KV, S, hd = 1, 2, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, hd)), jnp.float32)
+    g = jax.grad(lambda *a: flash_attention(*a, block_q=64, block_k=64).sum(),
+                 argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(lambda *a: attention_ref(*a).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# -------------------------------------------------------------- decode attn
+
+@pytest.mark.parametrize("B,H,KV,L,hd,valid", [
+    (2, 4, 2, 512, 64, 300),
+    (1, 8, 8, 256, 128, 256),
+    (4, 4, 1, 1024, 64, 7),  # nearly-empty cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, KV, L, hd, valid, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, KV, L, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, KV, L, hd)), dtype)
+    bias = jnp.where(jnp.arange(L) < valid, 0.0, NEG_INF).astype(jnp.float32)
+    o = decode_attention(q, k, v, bias, block_l=128)
+    o_ref = decode_attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+# ------------------------------------------------------------------- rwkv6
+
+@pytest.mark.parametrize("B,H,S,hd,chunk", [
+    (2, 3, 128, 32, 32), (1, 2, 96, 64, 16), (2, 1, 64, 64, 64),
+])
+def test_rwkv6_scan(B, H, S, hd, chunk):
+    rng = np.random.default_rng(0)
+    r = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.2, 0.999, size=(B, H, S, hd)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, hd, hd)), jnp.float32)
+    y, sT = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    y_ref, sT_ref = rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_rwkv6_state_chaining():
+    """Running two half-sequences with state carry == one full run."""
+    rng = np.random.default_rng(1)
+    B, H, S, hd = 1, 2, 64, 32
+    mk = lambda: jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(0.5, 0.99, size=(B, H, S, hd)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y_full, sT_full = rwkv6_scan(r, k, v, w, u, s0, chunk=16)
+    h = S // 2
+    y1, s1 = rwkv6_scan(r[:, :, :h], k[:, :, :h], v[:, :, :h], w[:, :, :h], u, s0, chunk=16)
+    y2, s2 = rwkv6_scan(r[:, :, h:], k[:, :, h:], v[:, :, h:], w[:, :, h:], u, s1, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=2)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sT_full), atol=1e-4)
+
+
+# --------------------------------------------------------------------- ssm
+
+@pytest.mark.parametrize("B,S,Di,N,chunk,bd", [
+    (2, 128, 64, 8, 32, 32), (1, 64, 128, 16, 64, 64), (2, 96, 32, 4, 16, 32),
+])
+def test_ssm_scan(B, S, Di, N, chunk, bd):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(B, S, Di)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, Di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, size=(Di, N)), jnp.float32)
+    Bc = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cc = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(Di,)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, Di, N)), jnp.float32)
+    y, hT = ssm_scan(x, dt, A, Bc, Cc, D, h0, chunk=chunk, block_d=bd)
+    y_ref, hT_ref = ssm_scan_ref(x, dt, A, Bc, Cc, D, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref), atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_grads_flow():
+    rng = np.random.default_rng(3)
+    B, S, Di, N = 1, 32, 16, 4
+    x = jnp.asarray(rng.normal(size=(B, S, Di)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, Di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, size=(Di, N)), jnp.float32)
+    Bc = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cc = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(Di,)), jnp.float32)
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+
+    def loss_k(x):
+        return ssm_scan(x, dt, A, Bc, Cc, D, h0, chunk=16, block_d=16)[0].sum()
+
+    def loss_r(x):
+        return ssm_scan_ref(x, dt, A, Bc, Cc, D, h0)[0].sum()
+
+    np.testing.assert_allclose(np.asarray(jax.grad(loss_k)(x)),
+                               np.asarray(jax.grad(loss_r)(x)), atol=1e-4)
+
+
+# --------------------------------------------------- training backward kernels
+
+def test_rwkv6_backward_kernel_matches_ref():
+    rng = np.random.default_rng(4)
+    B, H, S, hd = 2, 3, 96, 32
+    r, k, v = (jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.3, 0.99, size=(B, H, S, hd)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, hd, hd)), jnp.float32)
+
+    def loss(fn):
+        def f(*a):
+            y, sT = fn(*a)
+            return (y**2).sum() + (sT * 1.3).sum()
+        return f
+
+    gk = jax.grad(loss(lambda *a: rwkv6_scan(*a, chunk=32, bwd_impl="kernel")),
+                  argnums=tuple(range(6)))(r, k, v, w, u, s0)
+    gr = jax.grad(loss(rwkv6_scan_ref), argnums=tuple(range(6)))(r, k, v, w, u, s0)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_backward_kernel_matches_ref():
+    rng = np.random.default_rng(5)
+    B, S, Di, N = 2, 96, 64, 8
+    x = jnp.asarray(rng.normal(size=(B, S, Di)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, Di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, size=(Di, N)), jnp.float32)
+    Bc = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cc = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(Di,)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, Di, N)), jnp.float32)
+
+    def loss(fn):
+        def f(*a):
+            y, hT = fn(*a)
+            return (y**2).sum() + (hT * 1.3).sum()
+        return f
+
+    # block_d=32 < Di exercises the multi-d-block partial accumulation
+    gk = jax.grad(loss(lambda *a: ssm_scan(*a, chunk=32, block_d=32,
+                                           bwd_impl="kernel")),
+                  argnums=tuple(range(7)))(x, dt, A, Bc, Cc, D, h0)
+    gr = jax.grad(loss(ssm_scan_ref), argnums=tuple(range(7)))(x, dt, A, Bc, Cc, D, h0)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,82 @@
+"""Prefill + multi-step decode must match the full forward pass exactly —
+the core serving invariant, across every architecture family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, smoke_config
+from repro.models import build_model
+
+TOL = 5e-4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = smoke_config(arch).replace(capacity_factor=8.0)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S, ML, PRE = 2, 28, 40, 16
+    errs = []
+    if cfg.family == "audio":
+        E = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        full, _ = m.forward(params, embeds=E)
+        lp, cache = m.prefill(params, embeds=E[:, :PRE], max_len=ML)
+        errs.append(float(jnp.abs(lp - full[:, PRE - 1]).max()))
+        for t in range(PRE, S):
+            ld, cache = m.decode_step(params, cache, embeds=E[:, t:t + 1],
+                                      pos=jnp.int32(t))
+            errs.append(float(jnp.abs(ld - full[:, t]).max()))
+    elif cfg.family == "vlm":
+        P = cfg.prefix_len
+        pre = jnp.asarray(rng.normal(size=(B, P, cfg.d_model)), jnp.float32)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        full, _ = m.forward(params, tokens=toks, prefix_embeds=pre)
+        lp, cache = m.prefill(params, tokens=toks[:, :PRE], prefix_embeds=pre,
+                              max_len=ML + P)
+        errs.append(float(jnp.abs(lp - full[:, P + PRE - 1]).max()))
+        for t in range(PRE, S):
+            ld, cache = m.decode_step(params, cache, tokens=toks[:, t:t + 1],
+                                      pos=jnp.int32(P + t))
+            errs.append(float(jnp.abs(ld - full[:, P + t]).max()))
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        full, _ = m.forward(params, tokens=toks)
+        lp, cache = m.prefill(params, tokens=toks[:, :PRE], max_len=ML)
+        errs.append(float(jnp.abs(lp - full[:, PRE - 1]).max()))
+        for t in range(PRE, S):
+            ld, cache = m.decode_step(params, cache, tokens=toks[:, t:t + 1],
+                                      pos=jnp.int32(t))
+            errs.append(float(jnp.abs(ld - full[:, t]).max()))
+    assert max(errs) < TOL, f"{arch}: max err {max(errs):.3e}"
+
+
+def test_rolling_window_cache_wraps():
+    """Decode far past the window: rolling cache must stay position-exact."""
+    cfg = smoke_config("starcoder2-3b").replace(window_size=16)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 1, 48  # 3x window
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = m.forward(params, tokens=toks)
+    lp, cache = m.prefill(params, tokens=toks[:, :8], max_len=S)
+    for t in range(8, S):
+        ld, cache = m.decode_step(params, cache, tokens=toks[:, t:t + 1],
+                                  pos=jnp.int32(t))
+        err = float(jnp.abs(ld - full[:, t]).max())
+        assert err < TOL, f"t={t} err={err:.3e}"
+
+
+def test_gemma2_softcap_active():
+    """Softcap must change logits (guards against silently dropping it)."""
+    cfg = smoke_config("gemma2-2b")
+    m0 = build_model(cfg)
+    m1 = build_model(cfg.replace(attn_softcap=0.0, final_softcap=0.0))
+    params = m0.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
+    l0, _ = m0.forward(params, tokens=toks)
+    l1, _ = m1.forward(params, tokens=toks)
+    assert float(jnp.abs(l0 - l1).max()) > 1e-4

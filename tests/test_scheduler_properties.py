@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) on the scheduler's invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SimConfig, simulate
+from repro.core.controller import ControllerConfig, FleetView, desired_delta
+from repro.core.jobs import Job, Trace
+from repro.traces import yahoo_like
+
+
+# ------------------------------------------------------------- cost model
+
+@given(ns=st.integers(1, 500), p=st.floats(0.0, 1.0),
+       r=st.floats(1.0, 10.0))
+def test_budget_bound_T(ns, p, r):
+    """T = N((r-1)p + 1): the partition can never exceed the cost-equivalent
+    bound from §3.1 (with p realized as the integer server count
+    n_replaced = round(p * N_s))."""
+    cfg = SimConfig(n_servers=ns * 10, n_short_reserved=ns,
+                    replace_fraction=p, cost_ratio=r)
+    assert cfg.n_static_short + cfg.n_replaced == ns
+    # budget: K = floor(r * n_replaced) exactly
+    assert cfg.max_transient == math.floor(r * cfg.n_replaced)
+    # cost-equivalent partition bound with the realized p
+    p_eff = cfg.n_replaced / ns
+    T_bound = ns * ((r - 1) * p_eff + 1)
+    assert cfg.max_short_partition <= T_bound + 1e-9
+
+
+# ------------------------------------------------------------- controller
+
+view_st = st.builds(
+    FleetView,
+    n_long_busy=st.integers(0, 5000),
+    n_online_stable=st.integers(1, 5000),
+    n_draining=st.integers(0, 100),
+    n_pending=st.integers(0, 100),
+    n_active_transient=st.integers(0, 200),
+)
+
+
+@given(view=view_st, thr=st.floats(0.05, 0.999), k=st.integers(0, 200))
+@settings(max_examples=200)
+def test_controller_budget_and_sign(view, thr, k):
+    cfg = ControllerConfig(threshold=thr, max_transient=k)
+    d = desired_delta(view, cfg)
+    # never exceeds budget
+    assert view.n_active_transient + view.n_pending + max(d, 0) <= max(
+        k, view.n_active_transient + view.n_pending)
+    # never drains more than active transients
+    assert -d <= view.n_active_transient
+    # sign correctness
+    lr = view.n_long_busy / max(
+        view.n_online_stable + view.n_draining + view.n_pending, 1)
+    if d > 0:
+        assert lr > thr
+    if d < 0:
+        assert view.n_long_busy / max(view.n_online_stable - 1, 1) < thr
+
+
+@given(view=view_st, thr=st.floats(0.05, 0.999), k=st.integers(0, 200))
+@settings(max_examples=100)
+def test_controller_fixed_point(view, thr, k):
+    """Applying the controller's decision yields a hold (no thrash)."""
+    cfg = ControllerConfig(threshold=thr, max_transient=k)
+    d = desired_delta(view, cfg)
+    if d > 0:
+        after = FleetView(view.n_long_busy, view.n_online_stable,
+                          view.n_draining, view.n_pending + d,
+                          view.n_active_transient)
+    elif d < 0:
+        after = FleetView(view.n_long_busy, view.n_online_stable + d,
+                          view.n_draining - d, view.n_pending,
+                          view.n_active_transient + d)
+    else:
+        return
+    assert desired_delta(after, cfg) == 0
+
+
+# ------------------------------------------------------ end-to-end invariants
+
+def _small_trace(seed):
+    return yahoo_like(seed=seed, n_servers=100, n_short=4, horizon=1800,
+                      long_tasks_mean=20, short_tasks_mean=3)
+
+
+@given(seed=st.integers(0, 30), p=st.sampled_from([0.0, 0.25, 0.5]),
+       r=st.sampled_from([1.0, 2.0, 3.0]))
+@settings(max_examples=12, deadline=None)
+def test_simulation_invariants(seed, p, r):
+    tr = _small_trace(seed)
+    cfg = SimConfig(n_servers=100, n_short_reserved=4, replace_fraction=p,
+                    cost_ratio=r, seed=seed)
+    res = simulate(tr, cfg)
+    n_tasks = tr.n_tasks
+    # conservation: every task starts exactly once
+    assert len(res.short_waits) + len(res.long_waits) == n_tasks
+    assert (res.short_waits >= 0).all() and (res.long_waits >= 0).all()
+    # l_r stays a ratio
+    if res.lr_samples.size:
+        assert (res.lr_samples[:, 1] >= 0).all()
+        assert (res.lr_samples[:, 1] <= 1.0 + 1e-9).all()
+    # budget: active transients never exceed K
+    assert res.peak_active_transients <= cfg.max_transient
+    # no transients at all when p == 0 (Eagle baseline)
+    if p == 0.0:
+        assert res.transient_lifetimes.size == 0
+        assert res.avg_active_transients == 0.0
+    assert (res.transient_lifetimes >= 0).all()
+
+
+def test_revocation_path_reschedules():
+    tr = _small_trace(7)
+    cfg = SimConfig(n_servers=100, n_short_reserved=4, replace_fraction=0.5,
+                    cost_ratio=3.0, revocation_mttf=600.0, seed=7)
+    res = simulate(tr, cfg)
+    # all tasks still run to completion despite revocations
+    assert len(res.short_waits) + len(res.long_waits) >= tr.n_tasks
+    if res.n_revocations:
+        assert res.n_rescheduled >= 0
+
+
+def test_trace_determinism():
+    a = yahoo_like(seed=5, n_servers=200, n_short=4, horizon=3600)
+    b = yahoo_like(seed=5, n_servers=200, n_short=4, horizon=3600)
+    assert a.n_jobs == b.n_jobs and a.n_tasks == b.n_tasks
+    for ja, jb in zip(a.jobs[:50], b.jobs[:50]):
+        assert ja.arrival == jb.arrival
+        np.testing.assert_array_equal(ja.durations, jb.durations)

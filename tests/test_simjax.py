@@ -1,0 +1,61 @@
+"""Fluid (JAX) simulator: qualitative agreement with the DES + vmap sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import SimConfig, simulate
+from repro.core.simjax import FluidConfig, simulate_fluid, sweep, trace_to_rates
+from repro.traces import yahoo_like
+
+
+def _setup():
+    tr = yahoo_like(seed=11, n_servers=200, n_short=8, horizon=3 * 3600)
+    lw, sw = trace_to_rates(tr, 10.0)
+    cfg = FluidConfig(n_general=192, n_static_short=4, dt=10.0)
+    return tr, lw, sw, cfg
+
+
+def test_monotone_in_budget():
+    _, lw, sw, cfg = _setup()
+    delays = [float(simulate_fluid(lw, sw, cfg, threshold=0.95,
+                                   max_transient=k)["avg_short_delay"])
+              for k in (0, 4, 8, 12)]
+    assert all(a >= b - 1e-6 for a, b in zip(delays, delays[1:])), delays
+    assert delays[-1] < delays[0]
+
+
+def test_budget_respected():
+    _, lw, sw, cfg = _setup()
+    out = simulate_fluid(lw, sw, cfg, threshold=0.9, max_transient=6)
+    assert float(out["peak_transients"]) <= 6 + 1e-6
+
+
+def test_lr_in_range():
+    _, lw, sw, cfg = _setup()
+    out = simulate_fluid(lw, sw, cfg, threshold=0.95, max_transient=8)
+    lr = np.asarray(out["series"]["lr"])
+    assert (lr >= 0).all() and (lr <= 1.0 + 1e-6).all()
+
+
+def test_sweep_grid_shape_and_consistency():
+    _, lw, sw, cfg = _setup()
+    thr = np.array([0.9, 0.95])
+    ks = np.array([0.0, 8.0])
+    grid = sweep(lw, sw, cfg, thr, ks)
+    assert grid["avg_short_delay"].shape == (2, 2)
+    single = simulate_fluid(lw, sw, cfg, threshold=0.95, max_transient=8)
+    np.testing.assert_allclose(float(grid["avg_short_delay"][1, 1]),
+                               float(single["avg_short_delay"]), rtol=1e-5)
+
+
+def test_fluid_matches_des_ordering():
+    """DES and fluid model agree on the ordering of (baseline, r=3)."""
+    tr, lw, sw, cfg = _setup()
+    des_base = simulate(tr, SimConfig(n_servers=200, n_short_reserved=8,
+                                      replace_fraction=0.0)).summary()
+    des_r3 = simulate(tr, SimConfig(n_servers=200, n_short_reserved=8,
+                                    replace_fraction=0.5, cost_ratio=3.0)).summary()
+    fl_base = simulate_fluid(lw, sw, cfg, threshold=0.95, max_transient=0)
+    fl_r3 = simulate_fluid(lw, sw, cfg, threshold=0.95, max_transient=12)
+    assert des_r3["short_avg_wait_s"] < des_base["short_avg_wait_s"]
+    assert float(fl_r3["avg_short_delay"]) < float(fl_base["avg_short_delay"])
