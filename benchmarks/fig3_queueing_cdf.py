@@ -2,9 +2,11 @@
 CloudCoaster with r in {1,2,3} (N_s=80, p=0.5, L_r^T=0.95, 120 s
 provisioning) on a Yahoo-calibrated bursty trace.
 
-Two trace variants are reported: the default burst amplitude (stronger than
-the original Yahoo trace — CloudCoaster helps MORE) and a paper-calibrated
-milder variant whose improvement ratio lands in the paper's 4.8x band.
+All four runs come from the ``repro.sched`` scenario registry (the same
+presets the launcher, examples and tests use). Two trace variants are
+reported: the default burst amplitude (stronger than the original Yahoo
+trace — CloudCoaster helps MORE) and a paper-calibrated milder variant
+whose improvement ratio lands in the paper's 4.8x band.
 """
 
 from __future__ import annotations
@@ -12,32 +14,29 @@ from __future__ import annotations
 import time
 from typing import Dict
 
-from repro.core import SimConfig, simulate
-from repro.traces import yahoo_like
+from repro.sched import get_scenario
 
 PAPER = {"baseline_avg": 232.3, "baseline_max": 3194.0,
          "r3_avg": 48.25, "r3_max": 1737.0, "avg_improvement": 4.8,
          "max_improvement": 1.83}
 
+SCENARIOS = ("eagle", "coaster_r1", "coaster_r2", "coaster_r3")
+
 
 def run(quick: bool = False) -> Dict:
     t0 = time.time()
-    scale = dict(n_servers=400, n_short=8, horizon=4 * 3600) if quick else \
-        dict(n_servers=4000, n_short=80, horizon=24 * 3600)
-    sim_scale = dict(n_servers=scale["n_servers"],
-                     n_short_reserved=scale["n_short"])
     out: Dict = {"paper": PAPER, "variants": {}}
     for label, tkw in (
             ("default_bursts", {}),
             ("paper_band_bursts", dict(burst_mult=2.5, long_util=0.96))):
-        tr = yahoo_like(seed=42, **scale, **tkw)
+        # one shared trace per variant, every config replayed on it
+        tr = get_scenario("eagle").trace(quick=quick, seed=42,
+                                         trace_overrides=tkw)
         rows = {}
-        base = simulate(tr, SimConfig(**sim_scale, replace_fraction=0.0, seed=0))
-        rows["eagle_baseline"] = {**base.summary(), "cdf": base.wait_cdf()}
-        for r in (1.0, 2.0, 3.0):
-            res = simulate(tr, SimConfig(**sim_scale, replace_fraction=0.5,
-                                         cost_ratio=r, seed=0))
-            rows[f"coaster_r{int(r)}"] = {**res.summary(), "cdf": res.wait_cdf()}
+        for name in SCENARIOS:
+            res = get_scenario(name).run(quick=quick, trace=tr)
+            key = "eagle_baseline" if name == "eagle" else name
+            rows[key] = {**res.summary(), "cdf": res.wait_cdf()}
         b, c3 = rows["eagle_baseline"], rows["coaster_r3"]
         rows["avg_improvement_x"] = (b["short_avg_wait_s"]
                                      / max(c3["short_avg_wait_s"], 1e-9))

@@ -1,5 +1,9 @@
 """Beyond-paper: the JAX fluid simulator sweeping (L_r^T x budget) as one
-vmapped program — the cluster-design study the paper lists as future work."""
+vmapped program — the cluster-design study the paper lists as future work.
+
+The workload and fluid configuration come from the ``coaster_r3`` scenario
+(``repro.sched``); the controller inside the sweep is the same shared §3.2
+implementation (``fluid_controller_step``) the DES uses."""
 
 from __future__ import annotations
 
@@ -8,22 +12,19 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.simjax import FluidConfig, sweep, trace_to_rates
-from repro.traces import yahoo_like
+from repro.core.simjax import sweep
+from repro.sched import get_scenario
 
 
 def run(quick: bool = False) -> Dict:
     t0 = time.time()
-    scale = dict(n_servers=400, n_short=8, horizon=4 * 3600) if quick else \
-        dict(n_servers=4000, n_short=80, horizon=24 * 3600)
-    tr = yahoo_like(seed=42, **scale)
-    lw, sw = trace_to_rates(tr, 10.0)
-    n_short = scale["n_short"]
-    cfg = FluidConfig(n_general=scale["n_servers"] - n_short,
-                      n_static_short=n_short // 2, dt=10.0)
+    sc = get_scenario("coaster_r3")
+    lw, sw, fcfg, _ = sc.fluid_setup(quick=quick, seed=42)
+    n_ss = fcfg.n_static_short
     thresholds = np.linspace(0.85, 0.99, 8)
-    budgets = np.linspace(0, 3 * (n_short // 2), 7)  # up to r=3 budget
-    grid = sweep(lw, sw, cfg, thresholds, budgets)
+    budgets = np.linspace(0, 3 * n_ss, 7)  # up to r=3 budget
+    grid = sweep(lw, sw, fcfg, thresholds, budgets,
+                 policy=sc.fluid_params(quick=quick))
     delays = np.asarray(grid["avg_short_delay"])
     best = np.unravel_index(np.argmin(delays), delays.shape)
     return {

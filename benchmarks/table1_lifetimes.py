@@ -1,13 +1,13 @@
 """Paper Table 1: transient server lifetimes, active counts, r-normalized
-on-demand equivalents and the dynamic-partition cost saving."""
+on-demand equivalents and the dynamic-partition cost saving — the
+``coaster_r1..3`` presets from the ``repro.sched`` scenario registry."""
 
 from __future__ import annotations
 
 import time
 from typing import Dict
 
-from repro.core import SimConfig, simulate
-from repro.traces import yahoo_like
+from repro.sched import get_scenario
 
 PAPER = {
     1: dict(avg_life_h=0.77, max_life_h=12.8, avg_transient=29.0, r_norm=29.0),
@@ -19,16 +19,11 @@ PAPER = {
 
 def run(quick: bool = False) -> Dict:
     t0 = time.time()
-    scale = dict(n_servers=400, n_short=8, horizon=4 * 3600) if quick else \
-        dict(n_servers=4000, n_short=80, horizon=24 * 3600)
-    sim_scale = dict(n_servers=scale["n_servers"],
-                     n_short_reserved=scale["n_short"])
-    tr = yahoo_like(seed=42, **scale)
+    tr = get_scenario("coaster_r1").trace(quick=quick, seed=42)
     rows: Dict = {"paper": PAPER}
-    for r in (1.0, 2.0, 3.0):
-        s = simulate(tr, SimConfig(**sim_scale, replace_fraction=0.5,
-                                   cost_ratio=r, seed=0)).summary()
-        rows[f"r{int(r)}"] = {
+    for r in (1, 2, 3):
+        s = get_scenario(f"coaster_r{r}").run(quick=quick, trace=tr).summary()
+        rows[f"r{r}"] = {
             "avg_life_h": s["transient_avg_lifetime_h"],
             "max_life_h": s["transient_max_lifetime_h"],
             "avg_transient": s["avg_active_transients"],

@@ -1,7 +1,8 @@
 """Replay the paper's §4 evaluation at any scale.
 
-Runs Eagle + CloudCoaster r in {1,2,3} on a Yahoo-calibrated trace and prints
-the Fig. 3 / Table 1 numbers next to the paper's.
+Runs the Eagle + CloudCoaster r in {1,2,3} presets from the ``repro.sched``
+scenario registry on a shared Yahoo-calibrated trace and prints the
+Fig. 3 / Table 1 numbers next to the paper's.
 
 Run:  PYTHONPATH=src python examples/trace_replay.py [--full] [--seed 42]
       (--full = the paper's 4000-server, 24 h configuration; ~2 min)
@@ -9,8 +10,7 @@ Run:  PYTHONPATH=src python examples/trace_replay.py [--full] [--seed 42]
 
 import argparse
 
-from repro.core import SimConfig, simulate
-from repro.traces import yahoo_like
+from repro.sched import get_scenario
 
 
 def main():
@@ -18,35 +18,36 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--burst-mult", type=float, default=5.0)
+    ap.add_argument("--scenarios", default="eagle,coaster_r1,coaster_r2,coaster_r3",
+                    help="comma-separated registry names to replay")
     args = ap.parse_args()
 
-    scale = (dict(n_servers=4000, n_short=80, horizon=24 * 3600) if args.full
-             else dict(n_servers=400, n_short=8, horizon=4 * 3600))
-    sim = dict(n_servers=scale["n_servers"], n_short_reserved=scale["n_short"])
-    tr = yahoo_like(seed=args.seed, burst_mult=args.burst_mult, **scale)
+    quick = not args.full
+    names = args.scenarios.split(",")
+    tr = get_scenario(names[0]).trace(
+        quick=quick, seed=args.seed,
+        trace_overrides=dict(burst_mult=args.burst_mult))
     print(f"trace: {tr.n_jobs} jobs / {tr.n_tasks} tasks / "
           f"util {tr.meta['utilization']:.2f}")
 
-    rows = [("eagle", simulate(tr, SimConfig(**sim, replace_fraction=0.0)))]
-    for r in (1.0, 2.0, 3.0):
-        rows.append((f"r={int(r)}", simulate(
-            tr, SimConfig(**sim, replace_fraction=0.5, cost_ratio=r))))
+    rows = [(name, get_scenario(name).run(quick=quick, trace=tr))
+            for name in names]
 
-    print(f"\n{'config':8s}{'avg wait':>10s}{'max wait':>10s}"
+    print(f"\n{'config':16s}{'avg wait':>10s}{'max wait':>10s}"
           f"{'act transients':>15s}{'life h':>8s}{'save':>8s}")
     for name, res in rows:
         s = res.summary()
-        print(f"{name:8s}{s['short_avg_wait_s']:>10.1f}"
+        print(f"{name:16s}{s['short_avg_wait_s']:>10.1f}"
               f"{s['short_max_wait_s']:>10.0f}"
               f"{s['avg_active_transients']:>15.1f}"
               f"{s['transient_avg_lifetime_h']:>8.2f}"
               f"{s.get('dynamic_partition_cost_saving', 0):>8.1%}")
     base = rows[0][1].summary()
-    r3 = rows[-1][1].summary()
-    print(f"\navg improvement r=3: "
-          f"{base['short_avg_wait_s'] / r3['short_avg_wait_s']:.1f}x "
-          f"(paper: 4.8x) | max: "
-          f"{base['short_max_wait_s'] / r3['short_max_wait_s']:.1f}x "
+    last = rows[-1][1].summary()
+    print(f"\navg improvement {rows[-1][0]} vs {rows[0][0]}: "
+          f"{base['short_avg_wait_s'] / last['short_avg_wait_s']:.1f}x "
+          f"(paper r=3: 4.8x) | max: "
+          f"{base['short_max_wait_s'] / last['short_max_wait_s']:.1f}x "
           f"(paper: 1.83x)")
 
 

@@ -1,13 +1,18 @@
-"""The paper's contribution: Eagle-style hybrid scheduling + CloudCoaster's
-transient-aware elastic short partition.
+"""Simulation engines for the paper's Eagle + CloudCoaster cluster model.
+
+All scheduling *decisions* (placement policies, the §3.2 controller, the
+scenario presets) live in :mod:`repro.sched`; this package owns the
+mechanics that execute them:
 
   jobs.py     — Job/Trace model
   cluster.py  — SimConfig (paper §4 defaults) + server state
-  engine.py   — discrete-event simulator (Eagle baseline == replace_fraction 0;
-                CloudCoaster == replace_fraction p with transient manager)
+  engine.py   — discrete-event loop (Eagle baseline == replace_fraction 0;
+                CloudCoaster == replace_fraction p); delegates placement and
+                manager ticks to injected repro.sched policies
   metrics.py  — results & paper-table summaries
-  simjax.py   — JAX slotted-time simulator for vmap/pjit parameter sweeps
-  controller.py — the long-load-ratio controller as a reusable runtime policy
+  simjax.py   — JAX slotted-time simulator for vmap/pjit parameter sweeps,
+                driven by the same repro.sched controller (fluid adapter)
+  controller.py — back-compat shim re-exporting repro.sched.controller
 """
 
 from repro.core.cluster import SimConfig  # noqa: F401

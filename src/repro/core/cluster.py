@@ -58,6 +58,7 @@ class Server:
     running: Optional[Tuple[float, float, bool, int]] = None
     pending_work: float = 0.0  # queued + running remaining (approx: full durations)
     n_long: int = 0  # long tasks in queue+running
+    run_gen: int = 0  # increments per task start; stale-finish detection
     draining: bool = False
     online_t: float = 0.0
     shutdown_t: Optional[float] = None

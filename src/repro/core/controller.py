@@ -1,60 +1,13 @@
-"""The long-load-ratio controller (paper §3.2) as a reusable policy.
+"""Back-compat shim — the controller moved to :mod:`repro.sched.controller`.
 
-One implementation drives both:
-  * the discrete-event simulator (repro.core.engine), and
-  * the elastic serving runtime (repro.runtime), where "servers" are TPU pod
-    replicas: a replica pinned by a training job is "busy with a long task",
-    inference replicas are the short partition, and the controller rents
-    transient replicas against l_r.
-
-Semantics (paper §3.2, with removal projected over draining servers so the
-drain-lag doesn't trigger a thundering-herd removal):
-  while l_r > threshold and budget remains: request one transient
-  while l_r < threshold (projected after removal): drain one transient
+The long-load-ratio controller (paper §3.2) now lives in the unified
+scheduling-policy package together with its fluid (JAX-traceable) adapter
+and the placement policies; one implementation really does drive the DES
+(``repro.core.engine``), the fluid simulator (``repro.core.simjax``) and the
+elastic runtime (``repro.runtime``). Import from ``repro.sched`` in new
+code.
 """
 
-from __future__ import annotations
-
-from dataclasses import dataclass
-
-
-@dataclass(frozen=True)
-class ControllerConfig:
-    threshold: float = 0.95  # L_r^T
-    max_transient: int = 0  # K = r * N_s * p
-
-
-@dataclass(frozen=True)
-class FleetView:
-    """Controller inputs at a decision point."""
-
-    n_long_busy: int  # servers whose running task is long
-    n_online_stable: int  # online servers NOT draining (incl. transients)
-    n_draining: int  # online but marked for removal
-    n_pending: int  # requested transients not yet online
-    n_active_transient: int  # online transients not draining
-
-
-def desired_delta(view: FleetView, cfg: ControllerConfig) -> int:
-    """+k => request k transients; -k => drain k; 0 => hold.
-
-    Adds treat pending servers as already online (no over-request during the
-    provisioning delay); removals treat draining servers as already gone.
-    """
-    add = 0
-    while True:
-        proj_total = view.n_online_stable + view.n_draining + view.n_pending + add
-        budget_used = view.n_active_transient + view.n_pending + add
-        if (view.n_long_busy / max(proj_total, 1) > cfg.threshold
-                and budget_used < cfg.max_transient):
-            add += 1
-        else:
-            break
-    if add:
-        return add
-    rem = 0
-    while (view.n_active_transient - rem > 0
-           and view.n_long_busy / max(view.n_online_stable - rem - 1, 1)
-           < cfg.threshold):
-        rem += 1
-    return -rem
+from repro.sched.controller import (ControllerConfig, ControllerSpec,  # noqa: F401
+                                    FleetView, desired_delta,
+                                    fluid_controller_step, select_drain)

@@ -1,46 +1,55 @@
 """Discrete-event simulator for Eagle-style hybrid scheduling with
 CloudCoaster's transient manager.
 
+The engine is a thin event loop: placement, and the §3.2 transient
+controller are delegated to injected policy objects from ``repro.sched``
+(``LeastLoadedCentral`` + ``EagleProbing`` + ``ControllerSpec`` by default
+— the paper's configuration). The engine owns only event dispatch,
+enqueue/finish bookkeeping, and metric accumulation.
+
 Cluster model (following the Hawk/Eagle simulators):
   * each server runs one task at a time with a FIFO queue;
-  * long jobs are placed by the centralized scheduler on the least-loaded
-    *general-partition* server (lazy min-heap over pending work);
-  * short tasks are placed by decentralized probing (power-of-d over the whole
-    cluster) using Eagle's succinct state: probes avoid servers that hold long
-    tasks; if every probe round fails the task falls back to the short-only
-    partition (static on-demand + active transients) — Eagle's "divide and
-    stick to your probes" guarantee that shorts never queue behind longs;
+  * long jobs are placed by the centralized long policy (least-loaded
+    general server by default);
+  * short tasks are placed by the decentralized short policy (power-of-d
+    probing with Eagle's succinct-state long-avoidance by default; see
+    ``repro.sched.policy`` for the burst-guard and spot-aware variants);
   * CloudCoaster (replace_fraction > 0): on every long-task start/finish the
-    long-load ratio l_r = N_long_busy / N_total is recomputed; while
-    l_r > L_r^T and budget (K = r*N_s*p) remains, a transient server is
-    requested (online after provisioning_delay); while l_r < L_r^T, one
-    transient is drained (finishes its queue, then shuts down).
+    long-load ratio l_r = N_long_busy / N_total is recomputed and the
+    controller requests/drains transients against the budget K = r*N_s*p.
 
 Revocations: transient lifetimes in the paper's regime stay far below spot
 MTTF so the paper simulates none; set ``revocation_mttf`` to exercise the
 revocation path (queued tasks rescheduled through the normal short path;
 counted in the result).
+
+Determinism: the same ``(trace, SimConfig, seed)`` with the same policies
+yields a byte-identical ``SimResult`` — the policies draw from the engine's
+single RNG in a fixed order.
 """
 
 from __future__ import annotations
 
 import heapq
-import math
-from collections import deque
 from typing import List, Optional
 
 import numpy as np
 
 from repro.core.cluster import Server, SimConfig
-from repro.core.controller import ControllerConfig, FleetView, desired_delta
 from repro.core.jobs import Trace
 from repro.core.metrics import SimResult
+from repro.sched.controller import ControllerSpec, FleetView, select_drain
+from repro.sched.policy import (EagleProbing, LeastLoadedCentral,
+                                PlacementPolicy, ShortPlacementPolicy)
 
 _ARRIVAL, _FINISH, _ONLINE, _REVOKE = 0, 1, 2, 3
 
 
 class _Sim:
-    def __init__(self, trace: Trace, cfg: SimConfig):
+    def __init__(self, trace: Trace, cfg: SimConfig, *,
+                 long_policy: Optional[PlacementPolicy] = None,
+                 short_policy: Optional[ShortPlacementPolicy] = None,
+                 controller: Optional[ControllerSpec] = None):
         self.trace = trace
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
@@ -60,9 +69,10 @@ class _Sim:
         self.n_pending_transient = 0
         self.n_transients_created = 0
 
-        # lazy least-loaded heap for the centralized (long) scheduler
-        self.long_heap = [(0.0, sid) for sid in self.general_ids]
-        heapq.heapify(self.long_heap)
+        # scheduling policies (repro.sched) — bound to this cluster view
+        self.long_policy = (long_policy or LeastLoadedCentral()).bind(self)
+        self.short_policy = (short_policy or EagleProbing()).bind(self)
+        self.controller = controller or ControllerSpec.from_sim_config(cfg)
 
         # stats
         self.short_waits: List[float] = []
@@ -75,6 +85,8 @@ class _Sim:
         self.peak_active = 0
         self.n_revocations = 0
         self.n_rescheduled = 0
+        self.n_restarted = 0  # rescheduled tasks that had already started
+        self.n_completed = 0
 
     # ------------------------------------------------------------ event glue
 
@@ -92,6 +104,10 @@ class _Sim:
     def lr(self) -> float:
         n = self.n_online
         return self.n_long_busy / n if n else 0.0
+
+    def short_pool(self) -> List[int]:
+        """Short-only partition: static on-demand + active transients."""
+        return self.static_short_ids + self.active_transients
 
     def _tint_touch(self):
         dt = self.now - self._tint_last_t
@@ -115,25 +131,28 @@ class _Sim:
         else:
             self.short_waits.append(wait)
         s.running = (dur, self.now, is_long, job_id)
+        s.run_gen += 1
         if is_long:
             self.n_long_busy += 1
             self._manager_tick()
-        self.push(self.now + dur, _FINISH, s.sid)
+        self.push(self.now + dur, _FINISH, (s.sid, s.run_gen))
 
-    def _finish(self, sid: int):
+    def _finish(self, sid: int, gen: int):
         s = self.servers[sid]
-        if s.running is None:  # revoked mid-run; stale finish event
+        if s.running is None or gen != s.run_gen:
+            # stale event: the run this finish was scheduled for was revoked
+            # (and possibly rescheduled) — the generation counter makes this
+            # exact even for equal-duration tasks restarted at the same time
             return
         dur, start_t, is_long, job_id = s.running
-        if not math.isclose(start_t + dur, self.now, rel_tol=0, abs_tol=1e-6):
-            return  # stale event from a revoked/rescheduled task
         s.running = None
         s.pending_work -= dur
+        self.n_completed += 1
         if is_long:
             s.n_long -= 1
             self.n_long_busy -= 1
         if s.kind == "general":
-            heapq.heappush(self.long_heap, (s.pending_work, sid))
+            self.long_policy.task_finished(sid)
         self._start_next(s)
         if is_long:
             self._manager_tick()
@@ -149,45 +168,13 @@ class _Sim:
     # ------------------------------------------------------------- placement
 
     def _place_long(self, dur: float, job_id: int):
-        # centralized least-loaded over the general partition (lazy heap)
-        while True:
-            work, sid = heapq.heappop(self.long_heap)
-            s = self.servers[sid]
-            if math.isclose(work, s.pending_work, rel_tol=0, abs_tol=1e-9):
-                break
-            heapq.heappush(self.long_heap, (s.pending_work, sid))
+        sid = self.long_policy.select(dur, job_id)
         self._enqueue(sid, dur, True, job_id)
-        heapq.heappush(self.long_heap, (self.servers[sid].pending_work, sid))
-
-    def _probe_set(self) -> List[int]:
-        return self.general_ids  # shorts may probe anywhere; general is 98%
-
-    def _short_pool(self) -> List[int]:
-        return self.static_short_ids + self.active_transients
+        self.long_policy.placed(sid)
 
     def _place_short(self, dur: float, job_id: int):
-        cfg = self.cfg
-        best: Optional[int] = None
-        # Eagle probing with succinct state: avoid long-occupied servers
-        pool = self._probe_set()
-        for _ in range(cfg.probe_retries):
-            cand = self.rng.integers(0, len(pool), cfg.probe_d)
-            for c in cand:
-                sid = pool[int(c)]
-                s = self.servers[sid]
-                if s.long_occupied:
-                    continue
-                if best is None or s.pending_work < self.servers[best].pending_work:
-                    best = sid
-            if best is not None:
-                break
-        if best is None:
-            # fall back to the short-only partition (never has longs)
-            spool = self._short_pool()
-            cand = self.rng.integers(0, len(spool), min(cfg.probe_d, len(spool)))
-            best = min((spool[int(c)] for c in cand),
-                       key=lambda sid: self.servers[sid].pending_work)
-        self._enqueue(best, dur, False, job_id)
+        self._enqueue(self.short_policy.select(dur, job_id), dur, False,
+                      job_id)
 
     # ------------------------------------------------------ transient manager
 
@@ -207,15 +194,17 @@ class _Sim:
             n_pending=self.n_pending_transient,
             n_active_transient=len(self.active_transients),
         )
-        delta = desired_delta(
-            view, ControllerConfig(cfg.threshold, cfg.max_transient))
+        delta = self.controller.desired_delta(view)
         for _ in range(max(delta, 0)):
             self.n_pending_transient += 1
-            self.push(self.now + cfg.provisioning_delay, _ONLINE, None)
+            self.push(self.now + self.controller.provisioning_delay,
+                      _ONLINE, None)
         for _ in range(max(-delta, 0)):
-            # prefer the least-loaded (fastest to drain)
-            sid = min(self.active_transients,
-                      key=lambda i: self.servers[i].pending_work)
+            sid = select_drain(
+                self.active_transients,
+                preference=self.controller.drain_preference,
+                load_key=lambda i: self.servers[i].pending_work,
+                online_key=lambda i: self.servers[i].online_t)
             self.active_transients.remove(sid)
             self._tint_touch()
             s = self.servers[sid]
@@ -264,6 +253,7 @@ class _Sim:
             dur, start_t, is_long, job_id = s.running
             requeue.append((dur, start_t, is_long, job_id))
             s.running = None
+            self.n_restarted += 1
         s.pending_work = 0.0
         s.n_long = 0
         s.shutdown_t = self.now
@@ -295,7 +285,7 @@ class _Sim:
                     for dur in job.durations:
                         self._place_short(float(dur), job.job_id)
             elif kind == _FINISH:
-                self._finish(payload)
+                self._finish(*payload)
             elif kind == _ONLINE:
                 self._server_online()
             elif kind == _REVOKE:
@@ -314,10 +304,22 @@ class _Sim:
             n_rescheduled=self.n_rescheduled,
             extras={
                 "n_transients_created": self.n_transients_created,
+                "n_completed": self.n_completed,
+                "n_restarted": self.n_restarted,
                 "sim_end": self.now,
+                "short_policy": self.short_policy.name,
+                "long_policy": self.long_policy.name,
             },
         )
 
 
-def simulate(trace: Trace, cfg: SimConfig) -> SimResult:
-    return _Sim(trace, cfg).run()
+def simulate(trace: Trace, cfg: SimConfig, *,
+             long_policy: Optional[PlacementPolicy] = None,
+             short_policy: Optional[ShortPlacementPolicy] = None,
+             controller: Optional[ControllerSpec] = None) -> SimResult:
+    """Run the DES. Policies default to the paper's configuration
+    (centralized least-loaded longs, Eagle probing shorts, §3.2 controller
+    derived from ``cfg``); pass ``repro.sched`` objects to swap any of
+    them."""
+    return _Sim(trace, cfg, long_policy=long_policy,
+                short_policy=short_policy, controller=controller).run()

@@ -9,10 +9,16 @@ stepped by ``lax.scan`` over fixed time slots:
   state: long backlog (server-seconds), short backlog, transient count,
          provisioning pipeline (shift register of pending requests)
   per slot: long servers busy = min(general, backlog-driven demand);
-            l_r = long_busy / total; controller add/drain (paper §3.2,
-            same thresholds as the DES); short service capacity =
-            short partition + idle general servers (Eagle lets shorts
-            run anywhere not long-occupied).
+            controller add/drain via the SAME §3.2 implementation the DES
+            uses — ``repro.sched.controller.fluid_controller_step`` is the
+            JAX-traceable adapter of the shared ``ControllerSpec``;
+            short service capacity = short partition + idle general servers
+            (Eagle lets shorts run anywhere not long-occupied).
+
+Placement policies also project into the fluid model: pass the
+``FluidPolicyParams`` a ``repro.sched`` short policy exposes via
+``fluid_params()`` (burst-guard admission share, spot-aware transient
+availability); the defaults reproduce plain Eagle probing bit-for-bit.
 
 Everything is jit/vmap-able: ``sweep`` vmaps over (threshold, r, p) grids,
 and the grid axis pjit-shards over the "data" mesh axis — a cluster-design
@@ -26,13 +32,15 @@ cost-bounded transient usage).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.jobs import Trace
+from repro.sched.controller import fluid_controller_step
+from repro.sched.policy import FluidPolicyParams
 
 
 @dataclass(frozen=True)
@@ -55,14 +63,20 @@ def trace_to_rates(trace: Trace, dt: float) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def simulate_fluid(long_work, short_work, cfg: FluidConfig, *,
-                   threshold, max_transient) -> Dict[str, jax.Array]:
+                   threshold, max_transient,
+                   policy: Optional[FluidPolicyParams] = None
+                   ) -> Dict[str, jax.Array]:
     """Fluid CloudCoaster. threshold/max_transient may be traced scalars
-    (vmap over sweeps)."""
+    (vmap over sweeps); ``policy`` is a static ``FluidPolicyParams`` (the
+    fluid form of a ``repro.sched`` short policy; default = plain Eagle)."""
+    pol = policy or FluidPolicyParams()
     dt = cfg.dt
     n_gen = cfg.n_general
     n_ss = cfg.n_static_short
     thr = jnp.asarray(threshold, jnp.float32)
     k_max = jnp.asarray(max_transient, jnp.float32)
+    avail = jnp.float32(pol.transient_availability)
+    share = jnp.float32(pol.backlog_partition_share)
 
     def step(carry, inp):
         bl_long, bl_short, n_tr, pipe = carry
@@ -75,20 +89,23 @@ def simulate_fluid(long_work, short_work, cfg: FluidConfig, *,
         n_tr = n_tr + pipe[0]
         pipe = jnp.concatenate([pipe[1:], jnp.zeros((1,))])
         total = n_gen + n_ss + n_tr
-        lr = long_busy / total
-        # controller (paper §3.2): proportional fluid form of the unit loop
-        want_total = long_busy / thr
-        add = jnp.clip(want_total - (total + pipe.sum()),
-                       0.0, k_max - (n_tr + pipe.sum()))
-        add = jnp.where(lr > thr, add, 0.0)
+        # controller (paper §3.2) — shared adapter from repro.sched
+        lr, add, drain = fluid_controller_step(
+            long_busy, total, n_tr, pipe,
+            threshold=thr, max_transient=k_max, floor_total=n_gen + n_ss)
         pipe = pipe.at[-1].add(add)
-        drain = jnp.clip(total - jnp.maximum(want_total, n_gen + n_ss),
-                         0.0, n_tr)
-        drain = jnp.where(lr < thr, drain, 0.0)
         n_tr = n_tr - drain
         # short service: short partition + idle general servers
         idle_gen = jnp.maximum(n_gen - long_busy, 0.0)
-        cap = (n_ss + n_tr + idle_gen) * dt
+        if pol.is_identity:
+            cap = (n_ss + n_tr + idle_gen) * dt
+        else:
+            # spot-aware: transients serve at their expected availability;
+            # burst guard: standing backlog may consume at most `share` of
+            # the protected partition beyond this slot's fresh arrivals
+            cap_prot = (n_ss + avail * n_tr) * dt
+            cap = (idle_gen * dt
+                   + jnp.minimum(cap_prot, arr_s + share * cap_prot))
         bl_short = bl_short + arr_s
         served = jnp.minimum(bl_short, cap)
         bl_short = bl_short - served
@@ -113,12 +130,13 @@ def simulate_fluid(long_work, short_work, cfg: FluidConfig, *,
     }
 
 
-def sweep(long_work, short_work, cfg: FluidConfig, thresholds, max_transients):
+def sweep(long_work, short_work, cfg: FluidConfig, thresholds, max_transients,
+          policy: Optional[FluidPolicyParams] = None):
     """vmap the fluid simulator over a (threshold x budget) grid. Returns
     dict of (T, K) arrays. Under a mesh, shard the grid axes over "data"."""
     def one(thr, k):
         out = simulate_fluid(long_work, short_work, cfg,
-                             threshold=thr, max_transient=k)
+                             threshold=thr, max_transient=k, policy=policy)
         out.pop("series")
         return out
 

@@ -1,7 +1,12 @@
 """Scheduler-simulation launcher (the paper's own experiment surface).
 
-  PYTHONPATH=src python -m repro.launch.sim --servers 4000 --short 80 \
-      --p 0.5 --r 3 --threshold 0.95 --horizon-h 24
+Runs a named scenario from the ``repro.sched`` registry; CLI flags override
+individual knobs of the preset:
+
+  PYTHONPATH=src python -m repro.launch.sim --scenario coaster_r3 \
+      --threshold 0.95 --horizon-h 24
+  PYTHONPATH=src python -m repro.launch.sim --list
+  PYTHONPATH=src python -m repro.launch.sim --scenario spot_r3 --fluid
 """
 
 from __future__ import annotations
@@ -12,47 +17,71 @@ import json
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--servers", type=int, default=4000)
-    ap.add_argument("--short", type=int, default=80)
-    ap.add_argument("--p", type=float, default=0.5)
-    ap.add_argument("--r", type=float, default=3.0)
-    ap.add_argument("--threshold", type=float, default=0.95)
-    ap.add_argument("--provisioning", type=float, default=120.0)
-    ap.add_argument("--horizon-h", type=float, default=24.0)
-    ap.add_argument("--burst-mult", type=float, default=5.0)
-    ap.add_argument("--revocation-mttf-h", type=float, default=0.0)
+    ap.add_argument("--scenario", default="coaster_r3",
+                    help="preset from the repro.sched scenario registry")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    ap.add_argument("--servers", type=int, default=None)
+    ap.add_argument("--short", type=int, default=None)
+    ap.add_argument("--p", type=float, default=None)
+    ap.add_argument("--r", type=float, default=None)
+    ap.add_argument("--threshold", type=float, default=None)
+    ap.add_argument("--provisioning", type=float, default=None)
+    ap.add_argument("--horizon-h", type=float, default=None)
+    ap.add_argument("--burst-mult", type=float, default=None)
+    ap.add_argument("--revocation-mttf-h", type=float, default=None)
     ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized scale (400 servers / 4 h)")
     ap.add_argument("--fluid", action="store_true",
                     help="use the JAX slotted simulator instead of the DES")
     args = ap.parse_args()
 
-    from repro.core import SimConfig, simulate
-    from repro.traces import yahoo_like
+    from repro.sched import get_scenario, scenario_names
 
-    tr = yahoo_like(seed=args.seed, n_servers=args.servers,
-                    n_short=args.short, horizon=args.horizon_h * 3600,
-                    burst_mult=args.burst_mult)
-    print(f"trace: jobs={tr.n_jobs} tasks={tr.n_tasks} "
+    if args.list:
+        for name in scenario_names():
+            print(f"{name:24s} {get_scenario(name).description}")
+        return
+
+    sc = get_scenario(args.scenario)
+    trace_over = {}
+    sim_over = {}
+    if args.servers is not None:
+        trace_over["n_servers"] = sim_over["n_servers"] = args.servers
+    if args.short is not None:
+        trace_over["n_short"] = args.short
+        sim_over["n_short_reserved"] = args.short
+    if args.horizon_h is not None:
+        trace_over["horizon"] = args.horizon_h * 3600
+    if args.burst_mult is not None:
+        trace_over["burst_mult"] = args.burst_mult
+    if args.p is not None:
+        sim_over["replace_fraction"] = args.p
+    if args.r is not None:
+        sim_over["cost_ratio"] = args.r
+    if args.threshold is not None:
+        sim_over["threshold"] = args.threshold
+    if args.provisioning is not None:
+        sim_over["provisioning_delay"] = args.provisioning
+    if args.revocation_mttf_h is not None:
+        sim_over["revocation_mttf"] = args.revocation_mttf_h * 3600
+
+    tr = sc.trace(quick=args.quick, seed=args.seed, trace_overrides=trace_over)
+    print(f"scenario: {sc.name} | trace: jobs={tr.n_jobs} tasks={tr.n_tasks} "
           f"util={tr.meta['utilization']:.3f}")
     if args.fluid:
-        from repro.core.simjax import FluidConfig, simulate_fluid, trace_to_rates
+        from repro.core.simjax import simulate_fluid
 
-        lw, sw = trace_to_rates(tr, 10.0)
-        k = int(args.r * args.short * args.p)
-        out = simulate_fluid(
-            lw, sw,
-            FluidConfig(n_general=args.servers - args.short,
-                        n_static_short=int(args.short * (1 - args.p))),
-            threshold=args.threshold, max_transient=k)
+        lw, sw, fcfg, ctrl = sc.fluid_setup(quick=args.quick, trace=tr,
+                                            sim_overrides=sim_over)
+        out = simulate_fluid(lw, sw, fcfg,
+                             policy=sc.fluid_params(quick=args.quick), **ctrl)
         out.pop("series")
         print(json.dumps({k: float(v) for k, v in out.items()}, indent=1))
         return
-    cfg = SimConfig(
-        n_servers=args.servers, n_short_reserved=args.short,
-        replace_fraction=args.p, cost_ratio=args.r, threshold=args.threshold,
-        provisioning_delay=args.provisioning,
-        revocation_mttf=args.revocation_mttf_h * 3600, seed=args.seed)
-    res = simulate(tr, cfg)
+    res = sc.run(quick=args.quick, trace=tr, sim_seed=args.seed,
+                 sim_overrides=sim_over)
     print(json.dumps(res.summary(), indent=1, default=float))
 
 

@@ -12,6 +12,12 @@ On real multi-pod deployments the revocation notice arrives from the cloud
 provider's metadata service ~30s ahead (paper §3.3); here it is injected via
 ``preempt_at`` so the whole path is CPU-testable (tests/test_elastic.py
 rescales 4 -> 2 devices mid-run and checks loss-curve continuity).
+
+The trainer shares the scheduling layer with the simulators: pass a
+``repro.sched.ControllerSpec`` and its ``provisioning_delay`` becomes the
+rescale-hysteresis window (in steps) — two fleet changes within one
+provisioning window are the add/drain oscillation the §3.2 controller's
+projection avoids, so the trainer coalesces them into one.
 """
 
 from __future__ import annotations
@@ -32,6 +38,7 @@ from repro.optim.adamw import AdamW
 from repro.parallel import use_sharding_ctx
 from repro.parallel.layouts import layout_rules, param_specs, to_shardings
 from repro.runtime.straggler import StragglerWatchdog
+from repro.sched.controller import ControllerSpec
 
 
 def _mesh_from(devices, model_par: int) -> Mesh:
@@ -45,7 +52,8 @@ def _mesh_from(devices, model_par: int) -> Mesh:
 class ElasticTrainer:
     def __init__(self, model: DecoderLM, opt: AdamW, data: SyntheticBatches,
                  ckpt: Checkpointer, *, model_par: int = 1,
-                 devices=None, log: Optional[Callable[[str], None]] = None):
+                 devices=None, log: Optional[Callable[[str], None]] = None,
+                 spec: Optional[ControllerSpec] = None):
         self.model = model
         self.opt = opt
         self.data = data
@@ -56,6 +64,10 @@ class ElasticTrainer:
         self.watchdog = StragglerWatchdog()
         self.history = []  # (step, loss, n_devices)
         self.rescales = 0
+        self.spec = spec  # hysteresis window = spec.provisioning_delay steps
+        self._last_rescale_step: Optional[int] = None
+        self._deferred_n_dev: Optional[int] = None
+        self.n_coalesced_rescales = 0
         self._build(self.devices)
 
     # ---------------------------------------------------------------- builds
@@ -87,6 +99,37 @@ class ElasticTrainer:
 
     # ------------------------------------------------------------------- run
 
+    def _within_hysteresis(self, step: int, n_dev: int) -> bool:
+        """Discretionary grows inside one provisioning window are deferred
+        (the §3.2 anti-thrash projection); shrinks are revocations and must
+        always run."""
+        return (self.spec is not None
+                and n_dev >= len(self.devices)
+                and self._last_rescale_step is not None
+                and step - self._last_rescale_step
+                < self.spec.provisioning_delay)
+
+    def _plan_rescale(self, step: int, requested: Optional[int]
+                      ) -> Optional[int]:
+        """Device count to rescale to at this step, or None to hold.
+
+        Grows landing inside the hysteresis window are deferred to the end
+        of the window (a newer request — including a shrink, which always
+        applies — supersedes a deferred one); they are never dropped."""
+        n_dev = requested
+        if n_dev is None and self._deferred_n_dev is not None \
+                and not self._within_hysteresis(step, self._deferred_n_dev):
+            if self._deferred_n_dev != len(self.devices):  # not moot
+                n_dev = self._deferred_n_dev
+            self._deferred_n_dev = None
+        if n_dev is not None and self._within_hysteresis(step, n_dev):
+            self._deferred_n_dev = n_dev
+            self.n_coalesced_rescales += 1
+            self.log(f"rescale to {n_dev} at step {step} deferred "
+                     f"(within the provisioning window)")
+            return None
+        return n_dev
+
     def rescale(self, devices, step: int, state):
         """Drain -> checkpoint -> rebuild mesh -> reshard -> resume."""
         self.log(f"rescale at step {step}: {len(self.devices)} -> "
@@ -114,9 +157,11 @@ class ElasticTrainer:
             state = self._init_state(seed)
 
         for step in range(start, total_steps):
-            if step in preempt_at:
-                n_dev = preempt_at[step]
+            n_dev = self._plan_rescale(step, preempt_at.get(step))
+            if n_dev is not None:
+                self._deferred_n_dev = None
                 state = self.rescale(jax.devices()[:n_dev], step, state)
+                self._last_rescale_step = step
             batch = jax.device_put(self.data.batch(step), self.batch_shardings)
             t0 = time.perf_counter()
             with self.mesh, use_sharding_ctx(self.mesh, self.rules):

@@ -2,10 +2,11 @@
 
 Replicas are TPU pod slices serving autoregressive decode. A replica pinned
 by a long job (training / batch work) is "busy with a long task"; inference
-requests are short tasks. The controller (repro.core.controller — the same
-policy object the paper simulator uses) watches
-l_r = pinned / total and rents transient replicas against the budget
-K = r * N_s * p; removals drain (finish queued requests, take no new ones).
+requests are short tasks. The controller (``repro.sched.ControllerSpec`` —
+the same §3.2 implementation the DES and the fluid simulator consume)
+watches l_r = pinned / total and rents transient replicas against the
+budget K = r * N_s * p; removals drain (finish queued requests, take no new
+ones), with the drain victim chosen by the spec's ``drain_preference``.
 
 The fleet advances in ticks (1 tick = 1 decode step = one token for every
 active replica). ``decode_fn`` can be a real jitted model decode step — the
@@ -26,7 +27,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.controller import ControllerConfig, FleetView, desired_delta
+from repro.sched.controller import ControllerSpec, FleetView, select_drain
 
 
 @dataclass
@@ -65,9 +66,11 @@ class ElasticServingFleet:
                  max_transient: int = 0, provisioning_delay: int = 60,
                  hedge_factor: float = 4.0,
                  decode_fn: Optional[Callable] = None,
-                 revocation_mttf_ticks: float = 0.0, seed: int = 0):
-        self.ctrl = ControllerConfig(threshold, max_transient)
-        self.provisioning_delay = provisioning_delay
+                 revocation_mttf_ticks: float = 0.0, seed: int = 0,
+                 spec: Optional[ControllerSpec] = None):
+        self.spec = spec or ControllerSpec(threshold, max_transient,
+                                           provisioning_delay)
+        self.provisioning_delay = int(self.spec.provisioning_delay)
         self.hedge_factor = hedge_factor
         self.decode_fn = decode_fn
         self.rng = np.random.default_rng(seed)
@@ -110,11 +113,14 @@ class ElasticServingFleet:
             n_pending=len(self.pending_online),
             n_active_transient=len(self._transients()),
         )
-        delta = desired_delta(view, self.ctrl)
+        delta = self.spec.desired_delta(view)
         for _ in range(max(delta, 0)):
             self.pending_online.append(t + self.provisioning_delay)
         for _ in range(max(-delta, 0)):
-            tr = min(self._transients(), key=lambda r: r.load)
+            tr = select_drain(self._transients(),
+                              preference=self.spec.drain_preference,
+                              load_key=lambda r: r.load,
+                              online_key=lambda r: r.online_at)
             tr.draining = True
 
     def _advance_replica(self, r: _Replica, t: int):

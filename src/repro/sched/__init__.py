@@ -1,0 +1,25 @@
+"""Pluggable scheduling policies — the paper's contribution as one layer.
+
+The DES (``repro.core.engine``), the JAX fluid simulator
+(``repro.core.simjax``) and the elastic runtime (``repro.runtime``) all
+delegate their scheduling decisions here:
+
+  controller.py — §3.2 long-load-ratio controller: declarative
+                  ``ControllerSpec`` + discrete and fluid adapters
+  policy.py     — placement policies (centralized long, Eagle probing,
+                  BoPF-style burst guard, spot-aware) + their fluid forms
+  scenarios.py  — named ``trace x policy x SimConfig`` presets used by
+                  launchers, benchmarks, examples and tests
+"""
+
+from repro.sched.controller import (ControllerConfig, ControllerSpec,  # noqa: F401
+                                    FleetView, desired_delta,
+                                    fluid_controller_step, select_drain)
+from repro.sched.policy import (BurstGuardProbing, EagleProbing,  # noqa: F401
+                                FluidPolicyParams, LeastLoadedCentral,
+                                PlacementPolicy, ShortPlacementPolicy,
+                                SpotAwareProbing, make_long_policy,
+                                make_short_policy)
+from repro.sched.scenarios import (PAPER_SCALE, QUICK_SCALE, Scenario,  # noqa: F401
+                                   get_scenario, register_scenario,
+                                   scenario_names)

@@ -7,6 +7,7 @@ import numpy as np
 import jax.numpy as jnp
 import jax
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import smoke_config
