@@ -1,44 +1,79 @@
 """Paper Fig. 1: theoretical concurrent tasks on a Google-like trace —
 unlimited resources, omniscient zero-delay scheduler; 100 s bins then 4 h
-windows; large peak-to-trough swings motivate elastic capacity."""
+windows; large peak-to-trough swings motivate elastic capacity.
+
+Reworked on the ``repro.workload`` subsystem:
+
+  * the trace is built once and cached (npz) under artifacts/bench/traces —
+    repeat benchmark runs skip the ~50k-job synthesis;
+  * concurrency/burstiness readouts come from ``workload.stats``
+    (peak/trough/mean plus dispersion and Goh–Barabási burstiness);
+  * a batch-generation demo samples 32 seed-variant arrival traces with the
+    jitted, seed-vmapped JAX thinning sampler and times it against 32 exact
+    serial samples — the acceptance target is ≥10x (steady-state, i.e.
+    excluding the one-time jit compile, which is also reported).
+"""
 
 from __future__ import annotations
 
+import pathlib
 import time
 
 import numpy as np
 
-from repro.traces import google_like
+from repro.workload import (batch_sample_counts, cached_trace,
+                            concurrency_stats, google_arrivals, google_like,
+                            slot_counts)
+
+TRACE_CACHE = (pathlib.Path(__file__).resolve().parents[1]
+               / "artifacts" / "bench" / "traces")
+
+BATCH_SEEDS = 32
+BATCH_DT = 60.0
+
+
+def batch_generation_demo(horizon: float) -> dict:
+    """32 seed-variant slot-binned arrival traces: serial exact sampler vs
+    the jitted vmapped JAX thinning sampler."""
+    proc = google_arrivals()
+    seeds = np.arange(BATCH_SEEDS)
+
+    t0 = time.time()
+    serial = np.stack([slot_counts(proc.sample(int(s), horizon), horizon,
+                                   BATCH_DT) for s in seeds])
+    t_serial = time.time() - t0
+
+    t0 = time.time()
+    batch = batch_sample_counts(proc, seeds, horizon, dt=BATCH_DT)
+    t_first = time.time() - t0  # includes jit compile
+    t0 = time.time()
+    batch = batch_sample_counts(proc, seeds, horizon, dt=BATCH_DT)
+    t_batch = max(time.time() - t0, 1e-9)
+
+    # the two samplers draw different randomness; agreement is statistical
+    mean_serial = serial.mean() / BATCH_DT
+    mean_batch = batch.mean() / BATCH_DT
+    return {
+        "n_seeds": BATCH_SEEDS,
+        "n_slots": int(batch.shape[1]),
+        "serial_32_s": t_serial,
+        "jax_batch_first_call_s": t_first,
+        "jax_batch_32_s": t_batch,
+        "jax_batch_speedup_x": t_serial / t_batch,
+        "jax_batch_speedup_incl_compile_x": t_serial / max(t_first, 1e-9),
+        "serial_mean_rate": float(mean_serial),
+        "jax_mean_rate": float(mean_batch),
+    }
 
 
 def run(quick: bool = False):
     t0 = time.time()
-    horizon = 6 * 3600 if quick else 24 * 3600
-    tr = google_like(seed=3, n_servers=4000, horizon=horizon)
-    conc = tr.concurrent_tasks(bin_s=100.0)
-    # 4-hour smoothing (paper smooths 100s bins over 4h windows)
-    win = max(1, int(4 * 3600 / 100))
-    kernel = np.ones(win) / win
-    smooth = np.convolve(conc, kernel, mode="valid")
-    active = smooth[smooth > 0]
-    stats = {
-        "n_jobs": tr.n_jobs,
-        "n_tasks": tr.n_tasks,
-        "max_tasks_per_job": max(j.n_tasks for j in tr.jobs),
-        "mean_concurrent": float(active.mean()),
-        "std_concurrent": float(active.std()),
-        "peak_concurrent": float(active.max()),
-        "trough_concurrent": float(active.min()),
-        "peak_over_trough": float(active.max() / max(active.min(), 1e-9)),
-        "elapsed_s": time.time() - t0,
-    }
-    # ascii sparkline of the smoothed curve
-    bars = " ▁▂▃▄▅▆▇█"
-    idx = np.linspace(0, len(smooth) - 1, 64).astype(int)
-    lo, hi = smooth.min(), smooth.max()
-    spark = "".join(bars[int((smooth[i] - lo) / max(hi - lo, 1e-9) * 8)]
-                    for i in idx)
-    stats["sparkline"] = spark
+    horizon = 6 * 3600.0 if quick else 24 * 3600.0
+    tr = cached_trace(google_like, TRACE_CACHE, seed=3, n_servers=4000,
+                      horizon=horizon)
+    stats = concurrency_stats(tr, bin_s=100.0, window_s=4 * 3600.0)
+    stats["batch_generation"] = batch_generation_demo(horizon)
+    stats["elapsed_s"] = time.time() - t0
     return stats
 
 

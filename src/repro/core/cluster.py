@@ -24,11 +24,27 @@ class SimConfig:
     probe_retries: int = 3  # re-probe rounds avoiding long-occupied servers
     revocation_mttf: float = 0.0  # seconds; 0 = no revocations (paper regime)
     duplicate_to_ondemand: bool = False  # paper §3.3 safety copy (metric only)
+    hetero_slow_frac: float = 0.0  # fraction of general servers that are slow
+    hetero_slow_speed: float = 1.0  # their relative service speed (<1 = slower)
     seed: int = 0
 
     @property
     def n_general(self) -> int:
         return self.n_servers - self.n_short_reserved
+
+    @property
+    def n_slow_general(self) -> int:
+        return int(round(self.hetero_slow_frac * self.n_general))
+
+    @property
+    def mean_general_speed(self) -> float:
+        """Average service speed of the general partition (fluid-capacity
+        scale factor for heterogeneous-speed scenarios)."""
+        n = self.n_general
+        if n == 0 or self.n_slow_general == 0:
+            return 1.0
+        ns = self.n_slow_general
+        return (ns * self.hetero_slow_speed + (n - ns)) / n
 
     @property
     def n_static_short(self) -> int:
@@ -54,6 +70,7 @@ class SimConfig:
 class Server:
     sid: int
     kind: str  # general | short | transient
+    speed: float = 1.0  # service speed; a task of nominal work w runs w/speed
     queue: Deque = field(default_factory=deque)  # (duration, submit_t, is_long, job_id)
     running: Optional[Tuple[float, float, bool, int]] = None
     pending_work: float = 0.0  # queued + running remaining (approx: full durations)

@@ -58,8 +58,14 @@ class _Sim:
         self._seq = 0
 
         self.servers: List[Server] = []
+        # heterogeneous speeds: n_slow_general slow servers spread evenly
+        # across the general partition (deterministic Bresenham pattern so
+        # the same cfg always yields the same speed map)
+        n_slow, n_gen = cfg.n_slow_general, cfg.n_general
         for i in range(cfg.n_general):
-            self.servers.append(Server(i, "general"))
+            slow = n_slow and ((i + 1) * n_slow) // n_gen > (i * n_slow) // n_gen
+            self.servers.append(Server(
+                i, "general", speed=cfg.hetero_slow_speed if slow else 1.0))
         for i in range(cfg.n_static_short):
             self.servers.append(Server(cfg.n_general + i, "short"))
         self.general_ids = list(range(cfg.n_general))
@@ -135,7 +141,8 @@ class _Sim:
         if is_long:
             self.n_long_busy += 1
             self._manager_tick()
-        self.push(self.now + dur, _FINISH, (s.sid, s.run_gen))
+        # dur is nominal work; service time stretches on slow servers
+        self.push(self.now + dur / s.speed, _FINISH, (s.sid, s.run_gen))
 
     def _finish(self, sid: int, gen: int):
         s = self.servers[sid]

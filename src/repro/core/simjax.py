@@ -31,6 +31,7 @@ cost-bounded transient usage).
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
@@ -52,27 +53,45 @@ class FluidConfig:
 
 
 def trace_to_rates(trace: Trace, dt: float) -> Tuple[np.ndarray, np.ndarray]:
-    """Bin the trace into per-slot arriving work (server-seconds/slot)."""
+    """Bin the trace into per-slot arriving work (server-seconds/slot).
+
+    Vectorized with ``np.bincount`` (the Python per-job loop dominated sweep
+    setup on google_like traces).  Jobs arriving at or beyond the horizon
+    are dropped with a warning — the old behaviour silently folded them all
+    into the final slot, spiking its arrival rate.
+    """
     n = int(np.ceil(trace.horizon / dt)) + 1
-    long_w = np.zeros(n)
-    short_w = np.zeros(n)
-    for j in trace.jobs:
-        b = min(int(j.arrival // dt), n - 1)
-        (long_w if j.is_long else short_w)[b] += j.work
+    if not trace.jobs:
+        return np.zeros(n), np.zeros(n)
+    arrival = np.asarray([j.arrival for j in trace.jobs])
+    work = np.asarray([j.work for j in trace.jobs])
+    is_long = np.asarray([j.is_long for j in trace.jobs], bool)
+    late = arrival >= trace.horizon
+    if late.any():
+        warnings.warn(
+            f"trace_to_rates: dropping {int(late.sum())} job(s) arriving at "
+            f"or beyond horizon={trace.horizon:g}s", stacklevel=2)
+        arrival, work, is_long = arrival[~late], work[~late], is_long[~late]
+    slot = np.minimum((arrival // dt).astype(int), n - 1)
+    long_w = np.bincount(slot[is_long], weights=work[is_long], minlength=n)
+    short_w = np.bincount(slot[~is_long], weights=work[~is_long], minlength=n)
     return long_w, short_w
 
 
 def simulate_fluid(long_work, short_work, cfg: FluidConfig, *,
-                   threshold, max_transient,
+                   threshold, max_transient, n_static_short=None,
                    policy: Optional[FluidPolicyParams] = None
                    ) -> Dict[str, jax.Array]:
-    """Fluid CloudCoaster. threshold/max_transient may be traced scalars
-    (vmap over sweeps); ``policy`` is a static ``FluidPolicyParams`` (the
-    fluid form of a ``repro.sched`` short policy; default = plain Eagle)."""
+    """Fluid CloudCoaster. threshold/max_transient/n_static_short may be
+    traced scalars (vmap over sweeps — ``n_static_short`` is how a
+    replace-fraction axis enters: n_ss = N_s − round(p·N_s), overriding
+    ``cfg.n_static_short``); ``policy`` is a static ``FluidPolicyParams``
+    (the fluid form of a ``repro.sched`` short policy; default = Eagle)."""
     pol = policy or FluidPolicyParams()
     dt = cfg.dt
     n_gen = cfg.n_general
-    n_ss = cfg.n_static_short
+    n_ss = (cfg.n_static_short if n_static_short is None
+            else jnp.asarray(n_static_short, jnp.float32))
     thr = jnp.asarray(threshold, jnp.float32)
     k_max = jnp.asarray(max_transient, jnp.float32)
     avail = jnp.float32(pol.transient_availability)
@@ -131,15 +150,40 @@ def simulate_fluid(long_work, short_work, cfg: FluidConfig, *,
 
 
 def sweep(long_work, short_work, cfg: FluidConfig, thresholds, max_transients,
-          policy: Optional[FluidPolicyParams] = None):
-    """vmap the fluid simulator over a (threshold x budget) grid. Returns
-    dict of (T, K) arrays. Under a mesh, shard the grid axes over "data"."""
-    def one(thr, k):
+          policy: Optional[FluidPolicyParams] = None,
+          replace_fractions=None, n_short_reserved: Optional[int] = None):
+    """vmap the fluid simulator over a (threshold x budget) grid — or, with
+    ``replace_fractions``, over the full (p x threshold x budget) cube.
+
+    ``p`` (the paper's replace fraction) enters as the static-short split:
+    n_ss = N_s − round(p·N_s) with ``N_s = n_short_reserved`` (defaults to
+    ``cfg.n_static_short`` — pass the scenario's ``n_short_reserved`` so
+    p=0 reproduces the all-on-demand partition).  Returns dict of (T, K)
+    arrays, or (P, T, K) when ``replace_fractions`` is given.  Under a
+    mesh, shard the grid axes over "data".
+    """
+    def one(thr, k, n_ss=None):
         out = simulate_fluid(long_work, short_work, cfg,
-                             threshold=thr, max_transient=k, policy=policy)
+                             threshold=thr, max_transient=k,
+                             n_static_short=n_ss, policy=policy)
         out.pop("series")
         return out
 
-    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
-    return f(jnp.asarray(thresholds, jnp.float32),
-             jnp.asarray(max_transients, jnp.float32))
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    max_transients = jnp.asarray(max_transients, jnp.float32)
+    if replace_fractions is None:
+        f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
+        return f(thresholds, max_transients)
+
+    n_sr = (cfg.n_static_short if n_short_reserved is None
+            else n_short_reserved)
+
+    def one_p(p, thr, k):
+        n_ss = n_sr - jnp.round(p * n_sr)
+        return one(thr, k, n_ss)
+
+    f = jax.vmap(jax.vmap(jax.vmap(one_p, in_axes=(None, None, 0)),
+                          in_axes=(None, 0, None)),
+                 in_axes=(0, None, None))
+    return f(jnp.asarray(replace_fractions, jnp.float32), thresholds,
+             max_transients)

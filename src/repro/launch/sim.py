@@ -29,7 +29,18 @@ def main():
     ap.add_argument("--provisioning", type=float, default=None)
     ap.add_argument("--horizon-h", type=float, default=None)
     ap.add_argument("--burst-mult", type=float, default=None)
+    ap.add_argument("--rel-amplitude", type=float, default=None,
+                    help="diurnal envelope amplitude (diurnal_* scenarios)")
+    ap.add_argument("--spike-mult", type=float, default=None,
+                    help="flash-crowd spike multiplier (flash_crowd_*)")
+    ap.add_argument("--hetero-slow-frac", type=float, default=None,
+                    help="fraction of general servers that run slow")
+    ap.add_argument("--hetero-slow-speed", type=float, default=None,
+                    help="relative speed of the slow general servers")
     ap.add_argument("--revocation-mttf-h", type=float, default=None)
+    ap.add_argument("--trace-cache", default=None, metavar="DIR",
+                    help="cache the synthesized trace as npz under DIR "
+                         "(repro.workload.io; keyed on builder + params)")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized scale (400 servers / 4 h)")
@@ -56,6 +67,14 @@ def main():
         trace_over["horizon"] = args.horizon_h * 3600
     if args.burst_mult is not None:
         trace_over["burst_mult"] = args.burst_mult
+    if args.rel_amplitude is not None:
+        trace_over["rel_amplitude"] = args.rel_amplitude
+    if args.spike_mult is not None:
+        trace_over["spike_mult"] = args.spike_mult
+    if args.hetero_slow_frac is not None:
+        sim_over["hetero_slow_frac"] = args.hetero_slow_frac
+    if args.hetero_slow_speed is not None:
+        sim_over["hetero_slow_speed"] = args.hetero_slow_speed
     if args.p is not None:
         sim_over["replace_fraction"] = args.p
     if args.r is not None:
@@ -67,7 +86,17 @@ def main():
     if args.revocation_mttf_h is not None:
         sim_over["revocation_mttf"] = args.revocation_mttf_h * 3600
 
-    tr = sc.trace(quick=args.quick, seed=args.seed, trace_overrides=trace_over)
+    if args.trace_cache:
+        import repro.traces as traces
+        from repro.workload.io import cached_trace
+
+        kw = sc.trace_params(quick=args.quick, seed=args.seed,
+                             trace_overrides=trace_over)
+        tr = cached_trace(getattr(traces, sc.trace_fn), args.trace_cache,
+                          **kw)
+    else:
+        tr = sc.trace(quick=args.quick, seed=args.seed,
+                      trace_overrides=trace_over)
     print(f"scenario: {sc.name} | trace: jobs={tr.n_jobs} tasks={tr.n_tasks} "
           f"util={tr.meta['utilization']:.3f}")
     if args.fluid:

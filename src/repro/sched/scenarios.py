@@ -56,13 +56,20 @@ class Scenario:
     def scale(self, quick: bool = False) -> Dict:
         return dict(QUICK_SCALE if quick else PAPER_SCALE)
 
+    def trace_params(self, *, quick: bool = False, seed: int = 42,
+                     trace_overrides: Optional[Dict] = None) -> Dict:
+        """The full kwargs ``trace()`` passes to the builder — the single
+        merge point shared with cached synthesis (``sim.py --trace-cache``)."""
+        return {"seed": seed, **self.scale(quick), **self.trace_kwargs,
+                **(trace_overrides or {})}
+
     def trace(self, *, quick: bool = False, seed: int = 42,
               trace_overrides: Optional[Dict] = None):
         import repro.traces as traces
 
-        kw = {**self.scale(quick), **self.trace_kwargs,
-              **(trace_overrides or {})}
-        return getattr(traces, self.trace_fn)(seed=seed, **kw)
+        kw = self.trace_params(quick=quick, seed=seed,
+                               trace_overrides=trace_overrides)
+        return getattr(traces, self.trace_fn)(**kw)
 
     def sim_config(self, *, quick: bool = False, seed: int = 0,
                    sim_overrides: Optional[Dict] = None) -> SimConfig:
@@ -119,8 +126,11 @@ class Scenario:
                                trace_overrides=trace_overrides)
         cfg = self.sim_config(quick=quick, sim_overrides=sim_overrides)
         lw, sw = trace_to_rates(trace, dt)
+        # heterogeneous speeds project into the fluid model as effective
+        # general capacity (n_general servers at the mean service speed)
+        n_general_eff = int(round(cfg.n_general * cfg.mean_general_speed))
         fcfg = FluidConfig(
-            n_general=cfg.n_general, n_static_short=cfg.n_static_short,
+            n_general=n_general_eff, n_static_short=cfg.n_static_short,
             dt=dt, provision_slots=max(int(cfg.provisioning_delay // dt), 1))
         ctrl = dict(threshold=cfg.threshold, max_transient=cfg.max_transient)
         return lw, sw, fcfg, ctrl
@@ -178,6 +188,43 @@ register_scenario(Scenario(
     name="spot_r3",
     description="r=3 under spot revocations (2 h MTTF) with risk-priced "
                 "placement and oldest-first drain",
+    short_policy="spot_aware", policy_kwargs=dict(mttf_override=7200.0),
+    drain_preference="oldest",
+    **_coaster(3.0, revocation_mttf=7200.0)))
+
+# ---------------- workload-subsystem scenarios (repro.workload builders) ----
+
+register_scenario(Scenario(
+    name="google_eagle",
+    description="Eagle baseline on the Google heavy-tail trace (Fig. 1 "
+                "workload; tasks-per-job up to ~50k)",
+    trace_fn="google_like"))
+register_scenario(Scenario(
+    name="google_r3",
+    description="CloudCoaster p=0.5 r=3 on the Google heavy-tail trace",
+    trace_fn="google_like", **_coaster(3.0)))
+register_scenario(Scenario(
+    name="diurnal_r3",
+    description="r=3 on diurnal x MMPP arrivals (Alibaba-style day/night "
+                "envelope, peak 1.6x mean)",
+    trace_fn="diurnal_like", **_coaster(3.0)))
+register_scenario(Scenario(
+    name="flash_crowd_r3",
+    description="r=3 with burst-guard admission under flash-crowd spikes "
+                "(8x rate for 30 min windows; BoPF's bursty-tenant regime)",
+    trace_fn="flash_crowd_like",
+    short_policy="burst_guard", policy_kwargs=dict(guard_frac=0.5),
+    **_coaster(3.0)))
+register_scenario(Scenario(
+    name="hetero_speed_r3",
+    description="r=3 with heterogeneous server speeds (30% of the general "
+                "partition at 0.6x) — co-located-hardware regime",
+    **_coaster(3.0, hetero_slow_frac=0.3, hetero_slow_speed=0.6)))
+register_scenario(Scenario(
+    name="spot_diurnal_r3",
+    description="r=3 spot-aware under diurnal arrivals with 2 h MTTF "
+                "revocations — transient risk moves with the daily peak",
+    trace_fn="diurnal_like",
     short_policy="spot_aware", policy_kwargs=dict(mttf_override=7200.0),
     drain_preference="oldest",
     **_coaster(3.0, revocation_mttf=7200.0)))

@@ -1,122 +1,27 @@
-"""Bursty workload trace synthesis, calibrated to the published
-characteristics the paper relies on:
+"""Compatibility shim — trace synthesis now lives in ``repro.workload``.
 
-  * Yahoo trace (Chen et al. MASCOTS'11; Delgado et al. ATC'15/SoCC'16):
-    ~10% of jobs are long, long jobs dominate cluster time, short task mean
-    duration is tens of seconds vs ~20 minutes for long tasks.
-  * Google trace (Reiss et al. SoCC'12): tasks-per-job is heavy-tailed
-    (1 .. ~50k, mean ~35), concurrency swings >6x (paper Fig. 1).
-
-Arrivals are a 2-state MMPP (Markov-modulated Poisson process): a calm state
-and a burst state with ``burst_mult`` x the arrival rate — this produces the
-over/under-subscription phases CloudCoaster targets. Everything is seeded and
-pure: the same (seed, params) always yields the identical trace (property
-tests rely on this).
+``yahoo_like`` / ``google_like`` are re-exported from
+``repro.workload.builders`` and remain byte-identical for any given
+``(seed, params)`` to the historical in-module generators (the builders
+consume the RNG in the same order; tests/test_workload.py pins sha256
+hashes of the ``seed=0`` traces).  New arrival regimes (diurnal,
+flash-crowd, poisson control) and the composable process/mix layers are in
+``repro.workload``; prefer importing from there in new code.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.jobs import Job, Trace
+from repro.workload.builders import google_like, yahoo_like  # noqa: F401
+from repro.workload.jobmix import lognormal_mean as _lognormal  # noqa: F401
 
 
 def _mmpp_arrivals(rng, horizon, rate_avg, burst_mult=5.0, calm_frac=0.8,
                    dwell_calm=3600.0, dwell_burst=900.0):
-    """Arrival times of a 2-state MMPP with time-average rate ``rate_avg``."""
-    # rate_avg = calm_frac*rc + (1-calm_frac)*rb with rb = burst_mult*rc
-    rc = rate_avg / (calm_frac + (1 - calm_frac) * burst_mult)
-    rb = burst_mult * rc
-    times = []
-    t = 0.0
-    state_burst = rng.random() > calm_frac
-    next_switch = t + rng.exponential(dwell_burst if state_burst else dwell_calm)
-    while t < horizon:
-        rate = rb if state_burst else rc
-        t = t + rng.exponential(1.0 / rate)
-        while t >= next_switch:
-            state_burst = not state_burst
-            next_switch += rng.exponential(dwell_burst if state_burst else dwell_calm)
-        if t < horizon:
-            times.append(t)
-    return np.asarray(times)
+    """Legacy helper: arrival times of a 2-state MMPP with time-average rate
+    ``rate_avg`` (kept for callers of the old private API; now a thin wrapper
+    over :class:`repro.workload.arrivals.MMPP`)."""
+    from repro.workload.arrivals import MMPP
 
-
-def _lognormal(rng, mean, sigma, size):
-    """Lognormal with the requested arithmetic mean."""
-    mu = np.log(mean) - 0.5 * sigma**2
-    return rng.lognormal(mu, sigma, size)
-
-
-def yahoo_like(seed=0, n_servers=4000, n_short=80, horizon=24 * 3600.0,
-               long_util=0.97, short_util=0.65,
-               long_frac=0.095, short_mean_s=55.0, long_mean_s=1100.0,
-               short_tasks_mean=4.0, long_tasks_mean=130.0,
-               burst_mult=5.0, calm_frac=0.8) -> Trace:
-    """Yahoo-calibrated bursty trace (paper §4 evaluation workload).
-
-    Calibration (Hawk/Eagle's Yahoo characterization): ~10% of jobs are long
-    but they carry ~99% of cluster time; the general partition runs
-    long-saturated (``long_util`` of its capacity) so the long-load ratio
-    hovers around the paper's L_r^T = 0.95, while short work alone would load
-    the short-only partition at ``short_util``. At the paper's scale
-    (4000 servers / 80 short / 24 h) this yields ~24k jobs — the size of the
-    original Yahoo trace.
-    """
-    rng = np.random.default_rng(seed)
-    n_general = n_servers - n_short
-    target_work = (long_util * n_general + short_util * n_short) * horizon
-    work_per_job = (long_frac * long_tasks_mean * long_mean_s
-                    + (1 - long_frac) * short_tasks_mean * short_mean_s)
-    rate = target_work / work_per_job / horizon
-    arrivals = _mmpp_arrivals(rng, horizon, rate, burst_mult, calm_frac)
-    jobs = []
-    for i, t in enumerate(arrivals):
-        is_long = rng.random() < long_frac
-        if is_long:
-            n = max(1, int(_lognormal(rng, long_tasks_mean, 1.0, 1)[0]))
-            durs = _lognormal(rng, long_mean_s, 0.6, n)
-        else:
-            n = max(1, int(_lognormal(rng, short_tasks_mean, 1.0, 1)[0]))
-            durs = _lognormal(rng, short_mean_s, 0.7, n)
-        jobs.append(Job(i, float(t), durs.astype(np.float64), is_long))
-    tr = Trace(jobs, horizon, meta={
-        "kind": "yahoo_like", "seed": seed, "long_util": long_util,
-        "short_util": short_util,
-        "n_servers": n_servers,
-    })
-    tr.meta["utilization"] = tr.utilization(n_servers)
-    return tr
-
-
-def google_like(seed=0, n_servers=4000, horizon=24 * 3600.0, target_util=0.75,
-                long_frac=0.08, max_tasks=49960) -> Trace:
-    """Google-calibrated trace: heavy-tailed tasks-per-job (Pareto body up to
-    ~50k tasks) for the Fig. 1 burstiness analysis."""
-    rng = np.random.default_rng(seed)
-    short_mean_s, long_mean_s = 40.0, 1500.0
-
-    def tasks_per_job(n):
-        # lognormal body + pareto tail, mean ~35 (Reiss et al.)
-        body = _lognormal(rng, 18.0, 1.2, n)
-        tail_mask = rng.random(n) < 0.02
-        tail = (rng.pareto(1.3, n) + 1) * 200
-        out = np.where(tail_mask, tail, body)
-        return np.clip(out, 1, max_tasks).astype(int)
-
-    work_per_job = (long_frac * 35 * long_mean_s + (1 - long_frac) * 35 * short_mean_s)
-    rate = target_util * n_servers / work_per_job
-    arrivals = _mmpp_arrivals(rng, horizon, rate, burst_mult=6.0, calm_frac=0.75)
-    counts = tasks_per_job(len(arrivals))
-    jobs = []
-    for i, (t, n) in enumerate(zip(arrivals, counts)):
-        is_long = rng.random() < long_frac
-        mean = long_mean_s if is_long else short_mean_s
-        durs = _lognormal(rng, mean, 0.8, int(n))
-        jobs.append(Job(i, float(t), durs.astype(np.float64), is_long))
-    tr = Trace(jobs, horizon, meta={
-        "kind": "google_like", "seed": seed, "target_util": target_util,
-        "n_servers": n_servers,
-    })
-    tr.meta["utilization"] = tr.utilization(n_servers)
-    return tr
+    proc = MMPP.from_burst(rate_avg, burst_mult, calm_frac,
+                           dwell_calm=dwell_calm, dwell_burst=dwell_burst)
+    return proc.sample(rng, horizon)

@@ -1,0 +1,360 @@
+"""The repro.workload subsystem: arrival-process determinism and rate
+calibration, JAX-vs-serial sampler agreement, shim byte-identity (pinned
+hashes), trace persistence, the trace_to_rates fix, heterogeneous server
+speeds, the p-axis fluid sweep, and the new scenario catalog."""
+
+import hashlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, simulate
+from repro.core.jobs import Job, Trace
+from repro.core.simjax import FluidConfig, simulate_fluid, sweep, trace_to_rates
+from repro.sched import get_scenario, scenario_names
+from repro.workload import (ARRIVAL_PROCESSES, Diurnal, FlashCrowd, MMPP,
+                            Modulated, Poisson, Superpose, TRACE_BUILDERS,
+                            batch_sample_counts, cached_trace,
+                            concurrency_stats, counts_to_times, load_trace,
+                            make_arrival_process, save_trace, slot_counts)
+from repro.traces import google_like, yahoo_like
+
+HORIZON = 8 * 3600.0
+
+#: the full process catalog the property tests run over — every concrete
+#: ArrivalProcess plus both combinators
+PROCESSES = {
+    "poisson": Poisson(rate=0.05),
+    "mmpp2": MMPP.from_burst(0.05, burst_mult=5.0, calm_frac=0.8),
+    "mmpp3": MMPP(rates=(0.02, 0.1, 0.3), dwells=(3600.0, 1200.0, 300.0)),
+    "mmpp_trans": MMPP(rates=(0.02, 0.2), dwells=(1800.0, 600.0),
+                       trans=((0.3, 0.7), (0.9, 0.1))),
+    "diurnal": Diurnal(rate=0.05, rel_amplitude=0.7, period=4 * 3600.0),
+    "flash": FlashCrowd(rate=0.05, spike_mult=6.0, spike_duration=1200.0,
+                        n_spikes=2),
+    "flash_pinned": FlashCrowd(rate=0.05, spike_mult=4.0,
+                               spike_duration=900.0,
+                               spike_times=(0.25, 0.7)),
+    "modulated": Modulated(base=MMPP.from_burst(0.05),
+                           envelope=Diurnal(rate=1.0, rel_amplitude=0.5,
+                                            period=4 * 3600.0)),
+    "superpose": Superpose(parts=(Poisson(rate=0.02),
+                                  FlashCrowd(rate=0.01, spike_mult=5.0,
+                                             n_spikes=1))),
+}
+
+
+# ------------------------------------------------------- arrival processes
+
+@pytest.mark.parametrize("name", sorted(PROCESSES))
+def test_process_deterministic_and_well_formed(name):
+    proc = PROCESSES[name]
+    a = proc.sample(123, HORIZON)
+    b = proc.sample(123, HORIZON)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) >= 0).all()
+    assert a.size == 0 or (0 <= a[0] and a[-1] < HORIZON)
+    c = proc.sample(124, HORIZON)
+    assert a.size != c.size or not np.array_equal(a, c)
+
+
+@pytest.mark.parametrize("name", sorted(PROCESSES))
+def test_process_time_average_rate(name):
+    """Realized rate over several seeds tracks mean_rate (doubly stochastic
+    processes get path noise on top of Poisson noise, hence the loose tol)."""
+    proc = PROCESSES[name]
+    rates = [proc.sample(s, HORIZON).size / HORIZON for s in range(8)]
+    mean = np.mean(rates)
+    expect = proc.mean_rate(HORIZON)
+    assert expect > 0
+    assert abs(mean - expect) / expect < 0.2, (mean, expect)
+    assert proc.max_rate(HORIZON) >= expect * 0.999
+
+
+@pytest.mark.parametrize("name",
+                         ["poisson", "mmpp2", "diurnal", "flash_pinned",
+                          "modulated"])
+def test_jax_sampler_matches_serial_slot_rates(name):
+    """The vmapped JAX thinning sampler agrees with the exact serial sampler
+    on slot-binned rates (means over seeds; identical seeds → identical)."""
+    proc = PROCESSES[name]
+    dt = 600.0
+    seeds = np.arange(16)
+    batch = batch_sample_counts(proc, seeds, HORIZON, dt=dt)
+    again = batch_sample_counts(proc, seeds, HORIZON, dt=dt)
+    np.testing.assert_array_equal(batch, again)  # deterministic per seed
+    assert batch.shape == (16, int(np.ceil(HORIZON / dt)))
+    serial = np.stack([slot_counts(proc.sample(int(s), HORIZON), HORIZON, dt)
+                       for s in seeds])
+    rate_jax = batch.mean() / dt
+    rate_serial = serial.mean() / dt
+    assert abs(rate_jax - rate_serial) / rate_serial < 0.2, (
+        rate_jax, rate_serial)
+
+
+def test_jax_sampler_tracks_deterministic_rate_profile():
+    """For a deterministic λ(t) (diurnal), the per-slot mean over seeds must
+    follow the profile, not just the total."""
+    proc = PROCESSES["diurnal"]
+    dt = 600.0
+    batch = batch_sample_counts(proc, np.arange(48), HORIZON, dt=dt)
+    mean_counts = batch.mean(axis=0)
+    t = (np.arange(mean_counts.size) + 0.5) * dt
+    lam = proc.realize_rate(np.random.default_rng(0), HORIZON)(t) * dt
+    # normalized profiles correlate strongly
+    corr = np.corrcoef(mean_counts, lam)[0, 1]
+    assert corr > 0.9, corr
+
+
+def test_counts_to_times_roundtrip():
+    counts = np.array([3, 0, 2, 1])
+    times = counts_to_times(0, counts, dt=10.0)
+    assert times.size == 6
+    np.testing.assert_array_equal(
+        slot_counts(times, 40.0, 10.0), counts)
+
+
+def test_process_registry():
+    proc = make_arrival_process("mmpp_burst", rate_avg=0.1, burst_mult=3.0)
+    assert isinstance(proc, MMPP)
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        make_arrival_process("nope")
+    for name in ("yahoo_like", "google_like", "diurnal_like",
+                 "flash_crowd_like", "poisson_like"):
+        assert name in TRACE_BUILDERS
+
+
+# ----------------------------------------------------------- shim identity
+
+# sha256 over (arrival, is_long, durations) per job + horizon, computed on
+# the pre-subsystem traces/synthetic.py generators (PR-1 tree)
+_YAHOO_SEED0 = "6da88dad442fe03196614de0d2153293064a9dfa922ea163bd56a3faf57f3cc9"
+_GOOGLE_SEED0 = "11cf7750ed78e21806242acc44cfd84f1bce45ca8a1677dc1d05b40894240628"
+_YAHOO_SMALL = "8ae895c0f4f39ff4a4f014a197de8107a6e5064a669de56eb1823c478863f316"
+_GOOGLE_SMALL = "71cbc87937b780f8cbe7884b6dd4666a6675d41b28fed3965e17221d50244eee"
+
+
+def _trace_hash(tr):
+    h = hashlib.sha256()
+    for j in tr.jobs:
+        h.update(np.float64(j.arrival).tobytes())
+        h.update(np.uint8(j.is_long).tobytes())
+        h.update(np.ascontiguousarray(j.durations, np.float64).tobytes())
+    h.update(np.float64(tr.horizon).tobytes())
+    return h.hexdigest()
+
+
+def test_shim_small_scale_hashes():
+    assert _trace_hash(yahoo_like(seed=0, n_servers=200, n_short=8,
+                                  horizon=3600.0)) == _YAHOO_SMALL
+    assert _trace_hash(google_like(seed=0, n_servers=200,
+                                   horizon=3600.0)) == _GOOGLE_SMALL
+
+
+@pytest.mark.parametrize("fn,expected", [(yahoo_like, _YAHOO_SEED0),
+                                         (google_like, _GOOGLE_SEED0)])
+def test_shim_default_scale_hashes(fn, expected):
+    """yahoo_like(seed=0)/google_like(seed=0) at the paper's full scale are
+    byte-identical to the pre-refactor generators."""
+    assert _trace_hash(fn(seed=0)) == expected
+
+
+# ------------------------------------------------------------- persistence
+
+def test_save_load_roundtrip(tmp_path):
+    tr = yahoo_like(seed=11, n_servers=200, n_short=8, horizon=3600.0)
+    path = save_trace(tmp_path / "t.npz", tr)
+    back = load_trace(path)
+    assert _trace_hash(back) == _trace_hash(tr)
+    assert back.meta == {**tr.meta, "seed": tr.meta["seed"]}
+
+
+def test_diurnal_partial_period_mean():
+    """mean_rate integrates the sinusoid exactly over partial periods (the
+    quick-scale diurnal calibration: 4 h of a 24 h period)."""
+    proc = Diurnal(rate=1.0, rel_amplitude=0.6, period=24 * 3600.0)
+    t = np.linspace(0, 4 * 3600.0, 200_000, endpoint=False)
+    numeric = proc._rate_at(t).mean()
+    assert abs(proc.mean_rate(4 * 3600.0) - numeric) < 1e-4
+    # whole periods: back to the nominal rate
+    assert abs(proc.mean_rate(48 * 3600.0) - 1.0) < 1e-12
+
+
+def test_cache_key_covers_builder_defaults(tmp_path):
+    """A changed calibration *default* must invalidate the cache key, not
+    silently reuse the stale trace."""
+    from repro.workload.io import _full_params, trace_key
+
+    def builder(seed=0, target_util=0.75):
+        return Trace([], 10.0)
+
+    a = trace_key("b", **_full_params(builder, {"seed": 3}))
+    builder.__defaults__ = (0, 0.8)  # calibration default changes
+    b = trace_key("b", **_full_params(builder, {"seed": 3}))
+    assert a != b
+    # explicit kwargs still dominate defaults
+    c = trace_key("b", **_full_params(builder, {"seed": 3,
+                                                "target_util": 0.8}))
+    assert b == c
+
+
+def test_cached_trace_builds_once(tmp_path):
+    calls = []
+
+    def builder(seed=0, horizon=600.0):
+        calls.append(seed)
+        return Trace([Job(0, 1.0, np.array([5.0]), False)], horizon,
+                     meta={"seed": seed})
+
+    builder.__name__ = "toy"
+    a = cached_trace(builder, tmp_path, seed=3)
+    b = cached_trace(builder, tmp_path, seed=3)
+    c = cached_trace(builder, tmp_path, seed=4)  # different key
+    assert calls == [3, 4]
+    assert _trace_hash(a) == _trace_hash(b)
+    assert c.meta["seed"] == 4
+
+
+# ----------------------------------------------------------- trace_to_rates
+
+def test_trace_to_rates_bincount_matches_loop():
+    tr = yahoo_like(seed=2, n_servers=200, n_short=8, horizon=3600.0)
+    lw, sw = trace_to_rates(tr, 10.0)
+    n = int(np.ceil(tr.horizon / 10.0)) + 1
+    lw_ref, sw_ref = np.zeros(n), np.zeros(n)
+    for j in tr.jobs:
+        b = min(int(j.arrival // 10.0), n - 1)
+        (lw_ref if j.is_long else sw_ref)[b] += j.work
+    np.testing.assert_allclose(lw, lw_ref)
+    np.testing.assert_allclose(sw, sw_ref)
+
+
+def test_trace_to_rates_warns_and_drops_late_jobs():
+    jobs = [Job(0, 5.0, np.array([10.0]), False),
+            Job(1, 150.0, np.array([20.0]), True)]  # past horizon=100
+    tr = Trace(jobs, 100.0)
+    with pytest.warns(UserWarning, match="dropping 1 job"):
+        lw, sw = trace_to_rates(tr, 10.0)
+    assert lw.sum() == 0.0  # the late long job is excluded, not folded
+    assert sw.sum() == 10.0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        trace_to_rates(Trace([jobs[0]], 100.0), 10.0)  # no warning
+
+
+# ------------------------------------------------------ hetero server speeds
+
+def test_mean_general_speed():
+    cfg = SimConfig(n_servers=100, n_short_reserved=10, hetero_slow_frac=0.5,
+                    hetero_slow_speed=0.5)
+    assert cfg.n_slow_general == 45
+    assert abs(cfg.mean_general_speed - (45 * 0.5 + 45) / 90) < 1e-12
+    assert SimConfig(n_servers=100, n_short_reserved=10).mean_general_speed == 1.0
+
+
+def test_hetero_speed_engine_slows_completion():
+    tr = yahoo_like(seed=9, n_servers=100, n_short=4, horizon=1800.0,
+                    long_tasks_mean=20, short_tasks_mean=3)
+    base = simulate(tr, SimConfig(n_servers=100, n_short_reserved=4, seed=0))
+    slow = simulate(tr, SimConfig(n_servers=100, n_short_reserved=4, seed=0,
+                                  hetero_slow_frac=0.5,
+                                  hetero_slow_speed=0.25))
+    assert base.extras["n_completed"] == tr.n_tasks
+    assert slow.extras["n_completed"] == tr.n_tasks
+    # a half-slow cluster finishes the same work strictly later
+    assert slow.extras["sim_end"] > base.extras["sim_end"]
+
+
+def test_hetero_speed_identity_when_homogeneous():
+    tr = yahoo_like(seed=9, n_servers=100, n_short=4, horizon=1800.0)
+    a = simulate(tr, SimConfig(n_servers=100, n_short_reserved=4, seed=0))
+    b = simulate(tr, SimConfig(n_servers=100, n_short_reserved=4, seed=0,
+                               hetero_slow_frac=0.0, hetero_slow_speed=0.7))
+    assert (a.short_waits == b.short_waits).all()
+    assert (a.long_waits == b.long_waits).all()
+
+
+# ------------------------------------------------------------ p-axis sweep
+
+def test_sweep_p_axis_shapes_and_consistency():
+    rng = np.random.default_rng(0)
+    lw = rng.random(60) * 50
+    sw = rng.random(60) * 20
+    cfg = FluidConfig(n_general=90, n_static_short=10, dt=10.0,
+                      provision_slots=2)
+    thr = np.array([0.9, 0.95])
+    k = np.array([0.0, 8.0, 16.0])
+    two = sweep(lw, sw, cfg, thr, k)
+    assert np.asarray(two["avg_short_delay"]).shape == (2, 3)
+    ps = np.array([0.0, 0.5, 1.0])
+    cube = sweep(lw, sw, cfg, thr, k, replace_fractions=ps,
+                 n_short_reserved=10)
+    delays = np.asarray(cube["avg_short_delay"])
+    assert delays.shape == (3, 2, 3)
+    assert np.isfinite(delays).all()
+    # p=0 keeps the full static short partition == the 2-axis grid
+    np.testing.assert_allclose(delays[0], np.asarray(two["avg_short_delay"]),
+                               rtol=1e-6)
+    # all-transient split (p=1) with zero budget serves shorts strictly
+    # slower than the all-on-demand split
+    assert delays[2, :, 0].min() >= delays[0, :, 0].max()
+
+
+def test_simulate_fluid_n_static_short_override():
+    lw = np.full(30, 40.0)
+    sw = np.full(30, 15.0)
+    cfg = FluidConfig(n_general=90, n_static_short=10, dt=10.0,
+                      provision_slots=2)
+    full = simulate_fluid(lw, sw, cfg, threshold=0.95, max_transient=0.0)
+    none = simulate_fluid(lw, sw, cfg, threshold=0.95, max_transient=0.0,
+                          n_static_short=0.0)
+    assert float(none["avg_short_delay"]) >= float(full["avg_short_delay"])
+
+
+# --------------------------------------------------------- scenario catalog
+
+NEW_SCENARIOS = ("google_eagle", "google_r3", "diurnal_r3", "flash_crowd_r3",
+                 "hetero_speed_r3", "spot_diurnal_r3")
+SMALL_TRACE = dict(n_servers=150, n_short=8, horizon=1800.0)
+SMALL_SIM = dict(n_servers=150, n_short_reserved=8)
+
+
+def test_new_scenarios_registered():
+    names = scenario_names()
+    for name in NEW_SCENARIOS:
+        assert name in names
+
+
+@pytest.mark.parametrize("name", NEW_SCENARIOS)
+def test_scenario_runs_des_and_fluid(name):
+    sc = get_scenario(name)
+    tr = sc.trace(seed=5, trace_overrides=SMALL_TRACE)
+    assert tr.n_jobs > 0
+    res = sc.run(trace=tr, sim_overrides=dict(SMALL_SIM))
+    assert res.extras["n_completed"] >= tr.n_tasks  # == tasks (+restarts)
+    lw, sw, fcfg, ctrl = sc.fluid_setup(trace=tr,
+                                        sim_overrides=dict(SMALL_SIM))
+    out = simulate_fluid(lw, sw, fcfg, policy=sc.fluid_params(quick=True),
+                         **ctrl)
+    assert np.isfinite(float(out["avg_short_delay"]))
+
+
+def test_hetero_scenario_scales_fluid_capacity():
+    sc = get_scenario("hetero_speed_r3")
+    cfg = sc.sim_config(quick=True)
+    assert cfg.hetero_slow_frac == 0.3 and cfg.hetero_slow_speed == 0.6
+    tr = sc.trace(seed=5, trace_overrides=SMALL_TRACE)
+    _, _, fcfg, _ = sc.fluid_setup(trace=tr, sim_overrides=dict(SMALL_SIM))
+    cfg_small = sc.sim_config(sim_overrides=dict(SMALL_SIM))
+    expect = int(round(cfg_small.n_general * cfg_small.mean_general_speed))
+    assert fcfg.n_general == expect < cfg_small.n_general
+
+
+def test_concurrency_stats_readout():
+    tr = yahoo_like(seed=4, n_servers=200, n_short=8, horizon=4 * 3600.0)
+    st = concurrency_stats(tr, bin_s=100.0, window_s=1800.0)
+    assert st["n_jobs"] == tr.n_jobs
+    assert st["peak_concurrent"] >= st["mean_concurrent"] > 0
+    assert st["peak_over_trough"] >= 1.0
+    assert len(st["sparkline"]) > 0
