@@ -1,0 +1,56 @@
+"""Fluid-vs-DES calibration study (the ROADMAP's first open item): per-metric
+error tables across the whole scenario registry plus a coarse grid auto-fit
+of ``FluidPolicyParams`` per scenario, minimizing the ``short_avg_wait_s``
+error against the exact DES on a shared trace.
+
+One ``repro.exp.compare.calibrate_registry`` call; the JSON artifact (error
+tables + fitted params + aggregate before/after error) is what the CI
+calibration-smoke job uploads.
+
+  PYTHONPATH=src python -m benchmarks.calibration --quick \
+      --out artifacts/bench/calibration.json
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+
+def run(quick: bool = False, fit: bool = True,
+        scenarios: Optional[Sequence[str]] = None) -> Dict:
+    from repro.exp import calibrate_registry
+
+    # calibrate_registry stamps elapsed_s itself
+    return calibrate_registry(scenarios, quick=quick, fit=fit)
+
+
+def main() -> None:
+    import argparse
+    import json
+    import pathlib
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized scale (400 servers / 4 h)")
+    ap.add_argument("--no-fit", action="store_true",
+                    help="error tables only, skip the FluidPolicyParams fit")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated registry names (default: all)")
+    ap.add_argument("--out", default="artifacts/bench/calibration.json",
+                    metavar="FILE", help="JSON artifact path")
+    args = ap.parse_args()
+
+    names = [s for s in args.scenarios.split(",") if s] or None
+    res = run(quick=args.quick, fit=not args.no_fit, scenarios=names)
+    path = pathlib.Path(args.out)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(res, sort_keys=True, indent=1, default=float))
+    line = f"calibration: {len(res['scenarios'])} scenarios | mean |rel err| "
+    line += f"before={res['mean_abs_rel_err_before']:.1%}"
+    if "mean_abs_rel_err_after" in res:
+        line += f" after={res['mean_abs_rel_err_after']:.1%}"
+    print(f"{line} | wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,11 +2,12 @@
 CloudCoaster with r in {1,2,3} (N_s=80, p=0.5, L_r^T=0.95, 120 s
 provisioning) on a Yahoo-calibrated bursty trace.
 
-All four runs come from the ``repro.sched`` scenario registry (the same
-presets the launcher, examples and tests use). Two trace variants are
-reported: the default burst amplitude (stronger than the original Yahoo
-trace — CloudCoaster helps MORE) and a paper-calibrated milder variant
-whose improvement ratio lands in the paper's 4.8x band.
+All four runs go through the unified experiment API (``repro.exp.run``) on
+the ``repro.sched`` scenario presets; rows are ``RunResult`` metric dicts
+plus the wait CDF read off the persisted per-task series. Two trace
+variants are reported: the default burst amplitude (stronger than the
+original Yahoo trace — CloudCoaster helps MORE) and a paper-calibrated
+milder variant whose improvement ratio lands in the paper's 4.8x band.
 """
 
 from __future__ import annotations
@@ -14,6 +15,7 @@ from __future__ import annotations
 import time
 from typing import Dict
 
+from repro.exp import run as exp_run
 from repro.sched import get_scenario
 
 PAPER = {"baseline_avg": 232.3, "baseline_max": 3194.0,
@@ -34,9 +36,9 @@ def run(quick: bool = False) -> Dict:
                                          trace_overrides=tkw)
         rows = {}
         for name in SCENARIOS:
-            res = get_scenario(name).run(quick=quick, trace=tr)
+            res = exp_run(name, engine="des", quick=quick, trace=tr)
             key = "eagle_baseline" if name == "eagle" else name
-            rows[key] = {**res.summary(), "cdf": res.wait_cdf()}
+            rows[key] = {**res.metrics, "cdf": res.cdf("short_waits")}
         b, c3 = rows["eagle_baseline"], rows["coaster_r3"]
         rows["avg_improvement_x"] = (b["short_avg_wait_s"]
                                      / max(c3["short_avg_wait_s"], 1e-9))

@@ -5,7 +5,10 @@ artifacts/bench/.
   fig1   — concurrent-task burstiness (paper Fig. 1, Google-like trace)
   fig3   — queueing-delay CDFs, Eagle vs CloudCoaster r=1..3 (paper Fig. 3)
   table1 — transient lifetimes / active counts / cost saving (paper Table 1)
-  sweep  — beyond-paper (threshold x budget) fluid sweep (vmapped JAX)
+  sweep  — beyond-paper (p x threshold x budget) fluid sweep (vmapped JAX)
+  calibration — registry-wide fluid-vs-DES error tables + FluidPolicyParams
+                grid fit (repro.exp.compare); opt-in via --only (one DES +
+                ~17 fluid runs per scenario — minutes at full scale)
   roofline — three-term roofline per dry-run cell (deliverable g)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
@@ -18,7 +21,8 @@ import json
 import pathlib
 import time
 
-from benchmarks import fig1_burstiness, fig3_queueing_cdf, roofline, sweep_jax, table1_lifetimes
+from benchmarks import (calibration, fig1_burstiness, fig3_queueing_cdf,
+                        roofline, sweep_jax, table1_lifetimes)
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -43,6 +47,10 @@ def _derived(name: str, res: dict) -> str:
     if name == "sweep":
         return (f"best thr={res['best_threshold']:.2f} "
                 f"budget={res['best_budget']:.0f} delay={res['best_delay_s']:.1f}s")
+    if name == "calibration":
+        return (f"{len(res['scenarios'])} scenarios; mean |rel err| "
+                f"before={res['mean_abs_rel_err_before']:.1%} "
+                f"after={res.get('mean_abs_rel_err_after', float('nan')):.1%}")
     if name == "roofline":
         return (f"{res['n_cells_single']} single + {res['n_cells_multi']} "
                 f"multi cells; worst={res['worst_roofline'][:2]}")
@@ -61,9 +69,12 @@ def main() -> None:
         "fig3": fig3_queueing_cdf.run,
         "table1": table1_lifetimes.run,
         "sweep": sweep_jax.run,
+        "calibration": calibration.run,
         "roofline": roofline.run,
     }
-    only = set(args.only.split(",")) if args.only else set(benches)
+    # calibration fans out over the whole registry; run it only when asked
+    only = set(args.only.split(",")) if args.only else \
+        set(benches) - {"calibration"}
     print("name,seconds,derived")
     for name, fn in benches.items():
         if name not in only:

@@ -1,12 +1,12 @@
 """Beyond-paper: the JAX fluid simulator sweeping (p x L_r^T x budget) as
 one vmapped program — the cluster-design study the paper lists as future
-work, now over the full replace-fraction cube (the last PR-1 open item).
+work, over the full replace-fraction cube.
 
-The workload and fluid configuration come from the ``coaster_r3`` scenario
-(``repro.sched``); the controller inside the sweep is the same shared §3.2
-implementation (``fluid_controller_step``) the DES uses.  ``p`` enters as
-the static-short split n_ss = N_s − round(p·N_s) vmapped as a third axis of
-``repro.core.simjax.sweep``."""
+The whole study is one ``repro.exp.sweep`` call on the ``coaster_r3``
+scenario: the fluid engine vmaps the (replace_fraction x threshold x
+max_transient) grid (``repro.core.simjax.sweep`` underneath, with the same
+shared §3.2 controller the DES uses), and the returned ``SweepResult`` is
+addressable by grid point."""
 
 from __future__ import annotations
 
@@ -15,35 +15,34 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.simjax import sweep
+from repro.exp import sweep as exp_sweep
 from repro.sched import get_scenario
 
 
 def run(quick: bool = False) -> Dict:
     t0 = time.time()
-    sc = get_scenario("coaster_r3")
-    lw, sw, fcfg, _ = sc.fluid_setup(quick=quick, seed=42)
-    n_sr = sc.sim_config(quick=quick).n_short_reserved
+    n_sr = get_scenario("coaster_r3").sim_config(quick=quick).n_short_reserved
     thresholds = np.linspace(0.85, 0.99, 8)
     budgets = np.linspace(0, 3 * n_sr, 7)  # up to the all-replaced r=3 budget
     ps = np.array([0.0, 0.25, 0.5, 0.75, 1.0])
-    grid = sweep(lw, sw, fcfg, thresholds, budgets,
-                 policy=sc.fluid_params(quick=quick),
-                 replace_fractions=ps, n_short_reserved=n_sr)
-    delays = np.asarray(grid["avg_short_delay"])  # (P, T, K)
-    best = np.unravel_index(np.argmin(delays), delays.shape)
+    grid = exp_sweep("coaster_r3",
+                     {"replace_fraction": ps, "threshold": thresholds,
+                      "max_transient": budgets},
+                     engine="fluid", quick=quick, seed=42)
+    best = grid.best("short_avg_wait_s")
+    delays = grid.metrics["short_avg_wait_s"]  # (P, T, K)
     # the paper's operating point: p=0.5, threshold 0.95, full budget
     i_p5 = int(np.argmin(np.abs(ps - 0.5)))
     i_t95 = int(np.argmin(np.abs(thresholds - 0.95)))
     return {
-        "grid_shape": list(delays.shape),
+        "grid_shape": list(grid.shape),
         "replace_fractions": ps.tolist(),
         "thresholds": thresholds.tolist(),
         "budgets": budgets.tolist(),
-        "best_p": float(ps[best[0]]),
-        "best_threshold": float(thresholds[best[1]]),
-        "best_budget": float(budgets[best[2]]),
-        "best_delay_s": float(delays[best]),
+        "best_p": best["replace_fraction"],
+        "best_threshold": best["threshold"],
+        "best_budget": best["max_transient"],
+        "best_delay_s": best["short_avg_wait_s"],
         "paper_threshold_delay_s": float(delays[i_p5, i_t95, -1]),
         "n_grid_points": int(delays.size),
         "elapsed_s": time.time() - t0,

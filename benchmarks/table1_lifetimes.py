@@ -1,13 +1,17 @@
 """Paper Table 1: transient server lifetimes, active counts, r-normalized
-on-demand equivalents and the dynamic-partition cost saving — the
-``coaster_r1..3`` presets from the ``repro.sched`` scenario registry."""
+on-demand equivalents and the dynamic-partition cost saving.
+
+The ``coaster_r1..3`` column is one ``repro.exp.sweep`` over the cost-ratio
+axis (the ``r`` override) on a single shared trace — the same grid surface
+the fluid cube and the calibration study use.
+"""
 
 from __future__ import annotations
 
 import time
 from typing import Dict
 
-from repro.sched import get_scenario
+from repro.exp import sweep as exp_sweep
 
 PAPER = {
     1: dict(avg_life_h=0.77, max_life_h=12.8, avg_transient=29.0, r_norm=29.0),
@@ -19,10 +23,11 @@ PAPER = {
 
 def run(quick: bool = False) -> Dict:
     t0 = time.time()
-    tr = get_scenario("coaster_r1").trace(quick=quick, seed=42)
+    grid = exp_sweep("coaster_r1", {"r": [1.0, 2.0, 3.0]}, engine="des",
+                     quick=quick, seed=42)
     rows: Dict = {"paper": PAPER}
     for r in (1, 2, 3):
-        s = get_scenario(f"coaster_r{r}").run(quick=quick, trace=tr).summary()
+        s = grid.at(r=float(r))
         rows[f"r{r}"] = {
             "avg_life_h": s["transient_avg_lifetime_h"],
             "max_life_h": s["transient_max_lifetime_h"],

@@ -1,8 +1,8 @@
 """Replay the paper's §4 evaluation at any scale.
 
-Runs the Eagle + CloudCoaster r in {1,2,3} presets from the ``repro.sched``
-scenario registry on a shared Yahoo-calibrated trace and prints the
-Fig. 3 / Table 1 numbers next to the paper's.
+Runs the Eagle + CloudCoaster r in {1,2,3} presets through the unified
+experiment API (``repro.exp.run``) on a shared Yahoo-calibrated trace and
+prints the Fig. 3 / Table 1 numbers next to the paper's.
 
 Run:  PYTHONPATH=src python examples/trace_replay.py [--full] [--seed 42]
       (--full = the paper's 4000-server, 24 h configuration; ~2 min)
@@ -10,6 +10,7 @@ Run:  PYTHONPATH=src python examples/trace_replay.py [--full] [--seed 42]
 
 import argparse
 
+from repro.exp import run as exp_run
 from repro.sched import get_scenario
 
 
@@ -30,20 +31,20 @@ def main():
     print(f"trace: {tr.n_jobs} jobs / {tr.n_tasks} tasks / "
           f"util {tr.meta['utilization']:.2f}")
 
-    rows = [(name, get_scenario(name).run(quick=quick, trace=tr))
+    rows = [(name, exp_run(name, engine="des", quick=quick, trace=tr))
             for name in names]
 
     print(f"\n{'config':16s}{'avg wait':>10s}{'max wait':>10s}"
           f"{'act transients':>15s}{'life h':>8s}{'save':>8s}")
     for name, res in rows:
-        s = res.summary()
+        s = res.metrics
         print(f"{name:16s}{s['short_avg_wait_s']:>10.1f}"
               f"{s['short_max_wait_s']:>10.0f}"
               f"{s['avg_active_transients']:>15.1f}"
               f"{s['transient_avg_lifetime_h']:>8.2f}"
               f"{s.get('dynamic_partition_cost_saving', 0):>8.1%}")
-    base = rows[0][1].summary()
-    last = rows[-1][1].summary()
+    base = rows[0][1].metrics
+    last = rows[-1][1].metrics
     print(f"\navg improvement {rows[-1][0]} vs {rows[0][0]}: "
           f"{base['short_avg_wait_s'] / last['short_avg_wait_s']:.1f}x "
           f"(paper r=3: 4.8x) | max: "

@@ -8,6 +8,17 @@ from typing import Dict, List
 import numpy as np
 
 
+def _pctl(arr, q) -> float:
+    """Percentile with the shared empty-array guard.
+
+    Both engines report ``short_p50/p90/p99`` through this one helper (the
+    DES over per-task waits, the fluid adapter over per-slot delays), so the
+    canonical names and the empty-input convention (0.0) cannot drift.
+    """
+    arr = np.asarray(arr)
+    return float(np.percentile(arr, q)) if arr.size else 0.0
+
+
 @dataclass
 class SimResult:
     config: object
@@ -29,9 +40,9 @@ class SimResult:
         out = {
             "short_avg_wait_s": float(sw.mean()) if sw.size else 0.0,
             "short_max_wait_s": float(sw.max()) if sw.size else 0.0,
-            "short_p50_wait_s": float(np.percentile(sw, 50)) if sw.size else 0.0,
-            "short_p90_wait_s": float(np.percentile(sw, 90)) if sw.size else 0.0,
-            "short_p99_wait_s": float(np.percentile(sw, 99)) if sw.size else 0.0,
+            "short_p50_wait_s": _pctl(sw, 50),
+            "short_p90_wait_s": _pctl(sw, 90),
+            "short_p99_wait_s": _pctl(sw, 99),
             "long_avg_wait_s": float(self.long_waits.mean()) if self.long_waits.size else 0.0,
             "avg_active_transients": self.avg_active_transients,
             "peak_active_transients": float(self.peak_active_transients),
@@ -55,5 +66,15 @@ class SimResult:
     def wait_cdf(self, percentiles=None) -> Dict[str, float]:
         percentiles = percentiles or [10, 25, 50, 75, 90, 95, 99, 99.9]
         sw = self.short_waits
-        return {f"p{p}": float(np.percentile(sw, p)) if sw.size else 0.0
-                for p in percentiles}
+        return {f"p{p}": _pctl(sw, p) for p in percentiles}
+
+    def to_run_result(self, **kwargs):
+        """Project into the unified experiment schema (``repro.exp``).
+
+        Keyword arguments are those of
+        :func:`repro.exp.results.from_sim_result` (scenario name, overrides,
+        seed/wall-time provenance, the trace for its meta stats).
+        """
+        from repro.exp.results import from_sim_result
+
+        return from_sim_result(self, **kwargs)

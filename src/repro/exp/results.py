@@ -1,0 +1,293 @@
+"""Unified experiment result schema — one ``RunResult`` for every engine.
+
+The paper's headline numbers are comparisons *across* engines (DES vs the
+JAX fluid model) and parameter grids, so every experiment surface funnels
+through this one frozen record:
+
+  * ``engine`` tag + ``scenario`` name + the fully resolved engine config
+    and the user-supplied overrides (reproducibility),
+  * a scalar ``metrics`` dict with canonical names shared by the DES and
+    the fluid adapter (``short_avg_wait_s``, ``short_p90_wait_s``,
+    ``avg_active_transients``, ...),
+  * optional named time ``series`` (per-task waits, per-slot fluid
+    trajectories) — kept, not discarded, and npz-persistable,
+  * seed / wall-time provenance.
+
+Adapters: :func:`from_sim_result` (DES — also reachable as
+``SimResult.to_run_result``) and :func:`from_fluid_output` (the dict
+``repro.core.simjax.simulate_fluid`` returns).  Serialization is
+deterministic: ``to_json`` sorts keys; ``save``/``load`` round-trip through
+JSON (scalars) or flat npz (scalars + series), checked in tests/test_exp.py.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from dataclasses import asdict, dataclass, field, is_dataclass
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.core.metrics import SimResult, _pctl
+
+SCHEMA_VERSION = 1
+
+#: canonical scalar-metric names every engine adapter must emit (engines may
+#: add extras on top — the DES adds long waits and transient lifetimes, the
+#: fluid adapter adds ``avg_lr``)
+CANONICAL_METRICS = (
+    "short_avg_wait_s",
+    "short_max_wait_s",
+    "short_p50_wait_s",
+    "short_p90_wait_s",
+    "short_p99_wait_s",
+    "avg_active_transients",
+    "peak_active_transients",
+)
+
+
+def _jsonable(obj):
+    """Recursively coerce numpy/JAX scalars so json.dumps is deterministic
+    and standard (NaN — e.g. a metric a DES sweep point lacked — becomes
+    null, not the non-standard bare ``NaN`` token strict parsers reject)."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        return _jsonable(obj.item())
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, float):
+        return None if np.isnan(obj) else obj
+    if isinstance(obj, (str, int, bool)) or obj is None:
+        return obj
+    if is_dataclass(obj):
+        return _jsonable(asdict(obj))
+    return _jsonable(float(obj))  # jax scalars etc.
+
+
+# ------------------------------------------- shared npz-with-JSON-blob format
+
+def _save_npz(path: pathlib.Path, key: str, meta: Dict,
+              arrays: Dict[str, np.ndarray]) -> pathlib.Path:
+    """Flat npz with the scalar payload as a JSON blob under ``key`` —
+    the one on-disk format RunResult and SweepResult share."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    if path.suffix != ".npz":
+        path = path.with_suffix(path.suffix + ".npz")
+    blob = json.dumps(meta, sort_keys=True, default=float).encode()
+    np.savez_compressed(path, **{key: np.frombuffer(blob, np.uint8)},
+                        **{k: np.asarray(v) for k, v in arrays.items()})
+    return path
+
+
+def _load_npz(path: pathlib.Path, key: str):
+    """-> (meta dict, {array name: array}) saved by :func:`_save_npz`."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z[key]).decode())
+        arrays = {k: z[k].copy() for k in z.files if k != key}
+    return meta, arrays
+
+
+@dataclass(frozen=True)
+class RunResult:
+    """One engine run of one scenario, in the unified schema."""
+
+    engine: str
+    scenario: str
+    config: Dict  # resolved engine configuration (SimConfig / FluidConfig...)
+    overrides: Dict  # user-supplied trace/sim overrides, as given
+    metrics: Dict[str, float]  # canonical scalar metrics
+    series: Dict[str, np.ndarray] = field(default_factory=dict)
+    seed: Optional[int] = None  # trace-synthesis seed
+    sim_seed: Optional[int] = None  # engine seed (DES RNG)
+    quick: bool = False
+    wall_time_s: float = 0.0
+    meta: Dict = field(default_factory=dict)  # trace stats, engine extras
+    schema_version: int = SCHEMA_VERSION
+
+    # ------------------------------------------------------------- readouts
+
+    def cdf(self, key: str = "short_waits", percentiles=None
+            ) -> Dict[str, float]:
+        """Percentile readout of a named series (``SimResult.wait_cdf``
+        compatible — same default percentiles, same empty-input guard).
+        An unknown series name raises (a fluid result has ``short_delay``,
+        not ``short_waits``) rather than returning an all-zero CDF."""
+        if key not in self.series:
+            raise KeyError(f"no series {key!r} in this {self.engine} "
+                           f"RunResult; available: {sorted(self.series)}")
+        percentiles = percentiles or [10, 25, 50, 75, 90, 95, 99, 99.9]
+        arr = self.series[key]
+        return {f"p{p}": _pctl(arr, p) for p in percentiles}
+
+    def equals(self, other: "RunResult") -> bool:
+        """Exact structural equality (dataclass ``==`` is unusable with
+        ndarray fields); used by the serialization round-trip tests."""
+        if not isinstance(other, RunResult):
+            return False
+        scalar = ("engine", "scenario", "seed", "sim_seed", "quick",
+                  "wall_time_s", "schema_version")
+        if any(getattr(self, f) != getattr(other, f) for f in scalar):
+            return False
+        if (_jsonable(self.config) != _jsonable(other.config)
+                or _jsonable(self.overrides) != _jsonable(other.overrides)
+                or _jsonable(self.metrics) != _jsonable(other.metrics)
+                or _jsonable(self.meta) != _jsonable(other.meta)):
+            return False
+        if sorted(self.series) != sorted(other.series):
+            return False
+        return all(np.array_equal(np.asarray(self.series[k]),
+                                  np.asarray(other.series[k]))
+                   for k in self.series)
+
+    # -------------------------------------------------------- serialization
+
+    def to_json_dict(self, include_series: bool = False) -> Dict:
+        d = {
+            "schema_version": self.schema_version,
+            "engine": self.engine,
+            "scenario": self.scenario,
+            "config": _jsonable(self.config),
+            "overrides": _jsonable(self.overrides),
+            "metrics": _jsonable(self.metrics),
+            "seed": self.seed,
+            "sim_seed": self.sim_seed,
+            "quick": self.quick,
+            "wall_time_s": float(self.wall_time_s),
+            "meta": _jsonable(self.meta),
+        }
+        if include_series:
+            d["series"] = {k: np.asarray(v).tolist()
+                           for k, v in self.series.items()}
+        else:
+            d["series_keys"] = sorted(self.series)
+        return d
+
+    def to_json(self, include_series: bool = False) -> str:
+        return json.dumps(self.to_json_dict(include_series),
+                          sort_keys=True, indent=1, default=float)
+
+    def save(self, path: Union[str, pathlib.Path]) -> pathlib.Path:
+        """Persist the full result. ``*.json`` stores everything including
+        series as JSON; any other suffix stores flat npz (``.npz`` appended
+        if missing) — series as native arrays, scalars as a JSON blob."""
+        path = pathlib.Path(path)
+        if path.suffix == ".json":
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(self.to_json(include_series=True))
+            return path
+        return _save_npz(path, "__runresult__",
+                         self.to_json_dict(include_series=False),
+                         {f"series__{k}": v for k, v in self.series.items()})
+
+    @classmethod
+    def _from_json_dict(cls, d: Dict, series: Dict) -> "RunResult":
+        return cls(engine=d["engine"], scenario=d["scenario"],
+                   config=d.get("config", {}),
+                   overrides=d.get("overrides", {}),
+                   metrics=d.get("metrics", {}), series=series,
+                   seed=d.get("seed"), sim_seed=d.get("sim_seed"),
+                   quick=bool(d.get("quick", False)),
+                   wall_time_s=float(d.get("wall_time_s", 0.0)),
+                   meta=d.get("meta", {}),
+                   schema_version=int(d.get("schema_version",
+                                            SCHEMA_VERSION)))
+
+    @classmethod
+    def load(cls, path: Union[str, pathlib.Path]) -> "RunResult":
+        path = pathlib.Path(path)
+        if path.suffix == ".json":
+            d = json.loads(path.read_text())
+            series = {k: np.asarray(v, float)
+                      for k, v in d.get("series", {}).items()}
+            return cls._from_json_dict(d, series)
+        d, arrays = _load_npz(path, "__runresult__")
+        series = {k[len("series__"):]: v for k, v in arrays.items()
+                  if k.startswith("series__")}
+        return cls._from_json_dict(d, series)
+
+
+# ------------------------------------------------------------ engine adapters
+
+def _trace_meta(trace) -> Dict:
+    return {"n_jobs": int(trace.n_jobs), "n_tasks": int(trace.n_tasks),
+            "horizon": float(trace.horizon),
+            "utilization": float(trace.meta.get("utilization", 0.0))}
+
+
+def from_sim_result(res: SimResult, *, scenario: str, engine: str = "des",
+                    overrides: Optional[Dict] = None, quick: bool = False,
+                    seed: Optional[int] = None, sim_seed: Optional[int] = None,
+                    wall_time_s: float = 0.0, trace=None) -> RunResult:
+    """DES adapter: ``SimResult`` -> ``RunResult``.
+
+    ``metrics`` is exactly ``SimResult.summary()`` (same keys, same order,
+    same floats — the launcher's DES output stays byte-identical); the full
+    per-task wait arrays, transient lifetimes and l_r samples survive as
+    named series instead of being dropped.
+    """
+    lr = np.asarray(res.lr_samples, float)
+    lr = lr.reshape(-1, 2) if lr.size else np.empty((0, 2))
+    series = {
+        "short_waits": np.asarray(res.short_waits, float),
+        "long_waits": np.asarray(res.long_waits, float),
+        "transient_lifetimes": np.asarray(res.transient_lifetimes, float),
+        "lr_t": lr[:, 0].copy(),
+        "lr": lr[:, 1].copy(),
+    }
+    cfg = res.config
+    config = asdict(cfg) if is_dataclass(cfg) else dict(cfg or {})
+    meta = {**(res.extras or {}),
+            "n_revocations": int(res.n_revocations),
+            "n_rescheduled": int(res.n_rescheduled)}
+    if trace is not None:
+        meta["trace"] = _trace_meta(trace)
+    return RunResult(
+        engine=engine, scenario=scenario, config=_jsonable(config),
+        overrides=dict(overrides or {}),
+        metrics={k: float(v) for k, v in res.summary().items()},
+        series=series, seed=seed, sim_seed=sim_seed, quick=quick,
+        wall_time_s=float(wall_time_s), meta=_jsonable(meta))
+
+
+def from_fluid_output(out: Dict, *, scenario: str, fluid_config,
+                      controller: Optional[Dict] = None, policy=None,
+                      overrides: Optional[Dict] = None, quick: bool = False,
+                      seed: Optional[int] = None, wall_time_s: float = 0.0,
+                      trace=None) -> RunResult:
+    """Fluid adapter: ``simulate_fluid`` output dict -> ``RunResult``.
+
+    Canonical names map onto the DES's (``avg_short_delay`` ->
+    ``short_avg_wait_s``, ...); the short-wait percentiles come from the
+    per-slot delay series through the same ``_pctl`` guard the DES summary
+    uses.  Caveat for comparisons: fluid percentiles are over *time slots*,
+    DES percentiles over *tasks* — means and maxima are the directly
+    comparable pairs (what ``repro.exp.compare`` weights).
+    """
+    series = {k: np.asarray(v, float)
+              for k, v in (out.get("series") or {}).items()}
+    delays = series.get("short_delay", np.empty(0))
+    metrics = {
+        "short_avg_wait_s": float(out["avg_short_delay"]),
+        "short_max_wait_s": float(out["max_short_delay"]),
+        "short_p50_wait_s": _pctl(delays, 50),
+        "short_p90_wait_s": _pctl(delays, 90),
+        "short_p99_wait_s": _pctl(delays, 99),
+        "avg_active_transients": float(out["avg_transients"]),
+        "peak_active_transients": float(out["peak_transients"]),
+        "avg_lr": float(out["avg_lr"]),
+    }
+    config = asdict(fluid_config) if is_dataclass(fluid_config) else dict(
+        fluid_config or {})
+    config["controller"] = _jsonable(dict(controller or {}))
+    if policy is not None:
+        config["policy"] = _jsonable(policy)
+    meta = {"trace": _trace_meta(trace)} if trace is not None else {}
+    return RunResult(
+        engine="fluid", scenario=scenario, config=_jsonable(config),
+        overrides=dict(overrides or {}), metrics=metrics, series=series,
+        seed=seed, sim_seed=None, quick=quick,
+        wall_time_s=float(wall_time_s), meta=meta)

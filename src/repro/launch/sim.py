@@ -1,43 +1,40 @@
-"""Scheduler-simulation launcher (the paper's own experiment surface).
+"""Scheduler-simulation launcher — a thin CLI over ``repro.exp.run``.
 
-Runs a named scenario from the ``repro.sched`` registry; CLI flags override
-individual knobs of the preset:
+Runs a named scenario from the ``repro.sched`` registry on either engine;
+the override flags are generated from the declarative
+``repro.exp.OVERRIDE_SPEC`` table (one row per knob, no if-chain):
 
   PYTHONPATH=src python -m repro.launch.sim --scenario coaster_r3 \
       --threshold 0.95 --horizon-h 24
   PYTHONPATH=src python -m repro.launch.sim --list
-  PYTHONPATH=src python -m repro.launch.sim --scenario spot_r3 --fluid
+  PYTHONPATH=src python -m repro.launch.sim --scenario spot_r3 --fluid \
+      --out artifacts/spot_r3.runresult.npz
+
+``--out`` persists the full :class:`~repro.exp.RunResult` — time series
+included (per-task waits for the DES, the per-slot fluid trajectories that
+were previously discarded) — as npz, or JSON with a ``.json`` suffix.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 
 def main():
+    from repro.exp import OVERRIDE_SPEC, resolve_overrides
+    from repro.exp import run as exp_run
+    from repro.sched import get_scenario, scenario_names
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="coaster_r3",
                     help="preset from the repro.sched scenario registry")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
-    ap.add_argument("--servers", type=int, default=None)
-    ap.add_argument("--short", type=int, default=None)
-    ap.add_argument("--p", type=float, default=None)
-    ap.add_argument("--r", type=float, default=None)
-    ap.add_argument("--threshold", type=float, default=None)
-    ap.add_argument("--provisioning", type=float, default=None)
-    ap.add_argument("--horizon-h", type=float, default=None)
-    ap.add_argument("--burst-mult", type=float, default=None)
-    ap.add_argument("--rel-amplitude", type=float, default=None,
-                    help="diurnal envelope amplitude (diurnal_* scenarios)")
-    ap.add_argument("--spike-mult", type=float, default=None,
-                    help="flash-crowd spike multiplier (flash_crowd_*)")
-    ap.add_argument("--hetero-slow-frac", type=float, default=None,
-                    help="fraction of general servers that run slow")
-    ap.add_argument("--hetero-slow-speed", type=float, default=None,
-                    help="relative speed of the slow general servers")
-    ap.add_argument("--revocation-mttf-h", type=float, default=None)
+    for name, spec in OVERRIDE_SPEC.items():
+        ap.add_argument("--" + name.replace("_", "-"), dest=name,
+                        type=spec.type, default=None, help=spec.help)
     ap.add_argument("--trace-cache", default=None, metavar="DIR",
                     help="cache the synthesized trace as npz under DIR "
                          "(repro.workload.io; keyed on builder + params)")
@@ -46,9 +43,10 @@ def main():
                     help="CI-sized scale (400 servers / 4 h)")
     ap.add_argument("--fluid", action="store_true",
                     help="use the JAX slotted simulator instead of the DES")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="persist the full RunResult (series included) "
+                         "as npz, or JSON with a .json suffix")
     args = ap.parse_args()
-
-    from repro.sched import get_scenario, scenario_names
 
     if args.list:
         for name in scenario_names():
@@ -56,35 +54,8 @@ def main():
         return
 
     sc = get_scenario(args.scenario)
-    trace_over = {}
-    sim_over = {}
-    if args.servers is not None:
-        trace_over["n_servers"] = sim_over["n_servers"] = args.servers
-    if args.short is not None:
-        trace_over["n_short"] = args.short
-        sim_over["n_short_reserved"] = args.short
-    if args.horizon_h is not None:
-        trace_over["horizon"] = args.horizon_h * 3600
-    if args.burst_mult is not None:
-        trace_over["burst_mult"] = args.burst_mult
-    if args.rel_amplitude is not None:
-        trace_over["rel_amplitude"] = args.rel_amplitude
-    if args.spike_mult is not None:
-        trace_over["spike_mult"] = args.spike_mult
-    if args.hetero_slow_frac is not None:
-        sim_over["hetero_slow_frac"] = args.hetero_slow_frac
-    if args.hetero_slow_speed is not None:
-        sim_over["hetero_slow_speed"] = args.hetero_slow_speed
-    if args.p is not None:
-        sim_over["replace_fraction"] = args.p
-    if args.r is not None:
-        sim_over["cost_ratio"] = args.r
-    if args.threshold is not None:
-        sim_over["threshold"] = args.threshold
-    if args.provisioning is not None:
-        sim_over["provisioning_delay"] = args.provisioning
-    if args.revocation_mttf_h is not None:
-        sim_over["revocation_mttf"] = args.revocation_mttf_h * 3600
+    trace_over, sim_over = resolve_overrides(
+        **{name: getattr(args, name) for name in OVERRIDE_SPEC})
 
     if args.trace_cache:
         import repro.traces as traces
@@ -99,19 +70,14 @@ def main():
                       trace_overrides=trace_over)
     print(f"scenario: {sc.name} | trace: jobs={tr.n_jobs} tasks={tr.n_tasks} "
           f"util={tr.meta['utilization']:.3f}")
-    if args.fluid:
-        from repro.core.simjax import simulate_fluid
-
-        lw, sw, fcfg, ctrl = sc.fluid_setup(quick=args.quick, trace=tr,
-                                            sim_overrides=sim_over)
-        out = simulate_fluid(lw, sw, fcfg,
-                             policy=sc.fluid_params(quick=args.quick), **ctrl)
-        out.pop("series")
-        print(json.dumps({k: float(v) for k, v in out.items()}, indent=1))
-        return
-    res = sc.run(quick=args.quick, trace=tr, sim_seed=args.seed,
-                 sim_overrides=sim_over)
-    print(json.dumps(res.summary(), indent=1, default=float))
+    res = exp_run(sc, engine="fluid" if args.fluid else "des",
+                  quick=args.quick, seed=args.seed, sim_seed=args.seed,
+                  trace=tr, trace_overrides=trace_over,
+                  sim_overrides=sim_over)
+    print(json.dumps(res.metrics, indent=1, default=float))
+    if args.out:
+        path = res.save(args.out)
+        print(f"RunResult saved to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":
