@@ -6,6 +6,9 @@ artifacts/bench/.
   fig3   — queueing-delay CDFs, Eagle vs CloudCoaster r=1..3 (paper Fig. 3)
   table1 — transient lifetimes / active counts / cost saving (paper Table 1)
   sweep  — beyond-paper (p x threshold x budget) fluid sweep (vmapped JAX)
+  serving — pod-level short-delay-vs-budget: static on-demand reserve vs
+            the transient-backed elastic serving fleet
+            (exp.run(engine="serving") on the serve_* presets)
   calibration — registry-wide fluid-vs-DES error tables + FluidPolicyParams
                 grid fit (repro.exp.compare); opt-in via --only (one DES +
                 ~17 fluid runs per scenario — minutes at full scale)
@@ -22,7 +25,7 @@ import pathlib
 import time
 
 from benchmarks import (calibration, fig1_burstiness, fig3_queueing_cdf,
-                        roofline, sweep_jax, table1_lifetimes)
+                        roofline, serving_delay, sweep_jax, table1_lifetimes)
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -47,6 +50,12 @@ def _derived(name: str, res: dict) -> str:
     if name == "sweep":
         return (f"best thr={res['best_threshold']:.2f} "
                 f"budget={res['best_budget']:.0f} delay={res['best_delay_s']:.1f}s")
+    if name == "serving":
+        el, ref = res["elastic"], res["equal_budget_static"]
+        return (f"{res['scenario']}: elastic={el['short_avg_wait_s']:.0f}s "
+                f"@B={el['paid_budget']:.1f} static={ref['short_avg_wait_s']:.0f}s "
+                f"@B={ref['budget']:.0f} imp={res['improvement_x_at_equal_budget']:.1f}x "
+                f"save={res['budget_saving_frac']:.1%}")
     if name == "calibration":
         return (f"{len(res['scenarios'])} scenarios; mean |rel err| "
                 f"before={res['mean_abs_rel_err_before']:.1%} "
@@ -69,6 +78,7 @@ def main() -> None:
         "fig3": fig3_queueing_cdf.run,
         "table1": table1_lifetimes.run,
         "sweep": sweep_jax.run,
+        "serving": serving_delay.run,
         "calibration": calibration.run,
         "roofline": roofline.run,
     }

@@ -1,26 +1,34 @@
-"""Bursty serving with an elastic transient fleet (deliverable b).
+"""Bursty serving with an elastic transient fleet (deliverable b) — now
+scenario-driven through the unified experiment API.
 
 Real autoregressive decoding (a reduced gemma2-family model, prefill + KV
 cache + per-token decode through the production serve path) behind the
-CloudCoaster controller: replicas pinned by long jobs raise the long-load
-ratio; the controller rents transient replicas during request storms and
-drains them afterwards. Compares a static fleet vs the elastic fleet on the
-same request trace, with revocations and hedging enabled.
+CloudCoaster controller: the ``serve_yahoo`` scenario's trace becomes the
+request stream, its long class pins replicas, and the controller rents
+transient replicas during request storms. ``exp.run(..., engine="serving")``
+drives everything; the same call with ``max_transient=0`` plus an equal-cost
+on-demand reserve is the static baseline.
 
-Run:  PYTHONPATH=src python examples/serve_bursty.py
+Run:  PYTHONPATH=src python examples/serve_bursty.py [--no-model]
 """
 
-import numpy as np
+import sys
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import smoke_config
-from repro.models import build_model
-from repro.runtime import ElasticServingFleet, Request
+from repro import exp
+from repro.sched import get_scenario
+
+#: static baseline budget: extra on-demand reserve replicas (compared
+#: against the elastic fleet's avg_active_transients / r paid budget)
+STATIC_BUDGET = 2
 
 
 def build_decoder():
+    from repro.configs import smoke_config
+    from repro.models import build_model
+
     cfg = smoke_config("gemma2-2b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -42,38 +50,33 @@ def build_decoder():
     return decode_fn, tokens_out
 
 
-def make_workload(seed=0, n=900, horizon=1200):
-    rng = np.random.default_rng(seed)
-    ts = [int(rng.uniform(0, horizon)) for _ in range(n // 2)]
-    for w0 in (200, 700):  # two request storms
-        ts += [int(rng.uniform(w0, w0 + 80)) for _ in range(n // 4)]
-    reqs = [Request(i, t, gen_len=int(rng.integers(4, 16)))
-            for i, t in enumerate(sorted(ts))]
-    pinned = lambda t: 10 + (4 if (200 < t < 500 or 700 < t < 1000) else 0)
-    return reqs, pinned
-
-
 def main():
-    decode_fn, counter = build_decoder()
-    reqs, pinned = make_workload()
-    fresh = lambda: [Request(q.rid, q.arrival, q.gen_len) for q in reqs]
+    with_model = "--no-model" not in sys.argv
+    decode_fn, counter = (None, {"n": 0})
+    if with_model:
+        decode_fn, counter = build_decoder()
 
-    static = ElasticServingFleet(14, max_transient=0)
-    s_static = static.run(fresh(), pinned, 3000)
-
-    elastic = ElasticServingFleet(
-        14, threshold=0.75, max_transient=12, provisioning_delay=30,
-        revocation_mttf_ticks=2000, decode_fn=decode_fn, seed=0)
-    s_elastic = elastic.run(fresh(), pinned, 3000)
+    # the scenario's quick scale (400 servers / 4 h trace -> ~870
+    # requests): real decode is ~50k one-token steps, about a minute on CPU
+    common = dict(engine="serving", quick=True, seed=0, sim_seed=0)
+    # static baseline: no transients, an on-demand reserve instead
+    static = exp.run("serve_yahoo", sim_overrides={
+        "max_transient": 0, "n_reserve": STATIC_BUDGET}, **common)
+    elastic = exp.run("serve_yahoo", decode_fn=decode_fn, **common)
 
     print(f"{'':24s}{'static':>12s}{'elastic':>12s}")
-    for k in ("avg_wait", "p99_wait", "max_wait", "n_done",
-              "avg_active_transients", "n_transients_used",
-              "n_revocations", "n_hedges"):
-        print(f"{k:24s}{s_static[k]:>12.1f}{s_elastic[k]:>12.1f}")
-    print(f"\nreal decode steps executed on-model: {counter['n']}")
+    for k in ("short_avg_wait_s", "short_p99_wait_s", "short_max_wait_s",
+              "n_done", "avg_active_transients", "n_transients_used",
+              "n_revocations", "n_hedges", "n_hedge_cancelled"):
+        print(f"{k:24s}{static.metrics[k]:>12.1f}{elastic.metrics[k]:>12.1f}")
+    r = get_scenario("serve_yahoo").sim_config(quick=True).cost_ratio
+    cost_el = elastic.metrics["avg_active_transients"] / r
+    print(f"\npaid budget (on-demand equivalents): "
+          f"static={float(STATIC_BUDGET):.1f} elastic={cost_el:.1f}")
+    if with_model:
+        print(f"real decode steps executed on-model: {counter['n']}")
     print(f"avg wait improvement: "
-          f"{s_static['avg_wait'] / max(s_elastic['avg_wait'], 1e-9):.1f}x")
+          f"{static.metrics['short_avg_wait_s'] / max(elastic.metrics['short_avg_wait_s'], 1e-9):.1f}x")
 
 
 if __name__ == "__main__":

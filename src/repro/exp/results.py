@@ -14,8 +14,9 @@ through this one frozen record:
   * seed / wall-time provenance.
 
 Adapters: :func:`from_sim_result` (DES — also reachable as
-``SimResult.to_run_result``) and :func:`from_fluid_output` (the dict
-``repro.core.simjax.simulate_fluid`` returns).  Serialization is
+``SimResult.to_run_result``), :func:`from_fluid_output` (the dict
+``repro.core.simjax.simulate_fluid`` returns) and
+:func:`from_serving_fleet` (``repro.runtime.serving.ElasticServingFleet``).  Serialization is
 deterministic: ``to_json`` sorts keys; ``save``/``load`` round-trip through
 JSON (scalars) or flat npz (scalars + series), checked in tests/test_exp.py.
 """
@@ -290,4 +291,61 @@ def from_fluid_output(out: Dict, *, scenario: str, fluid_config,
         engine="fluid", scenario=scenario, config=_jsonable(config),
         overrides=dict(overrides or {}), metrics=metrics, series=series,
         seed=seed, sim_seed=None, quick=quick,
+        wall_time_s=float(wall_time_s), meta=meta)
+
+
+def from_serving_fleet(fleet, requests, *, scenario: str, config,
+                       workload_meta: Optional[Dict] = None,
+                       overrides: Optional[Dict] = None, quick: bool = False,
+                       seed: Optional[int] = None,
+                       sim_seed: Optional[int] = None,
+                       wall_time_s: float = 0.0, trace=None) -> RunResult:
+    """Serving adapter: a finished ``ElasticServingFleet`` run over its
+    ``Request`` stream -> ``RunResult``.
+
+    Canonical names map per-request queueing waits (ticks -> seconds via
+    ``config.tick_s``) onto the DES's task-wait metrics through the shared
+    ``_pctl`` guard; serving extras (hedges, cancellations, revocations,
+    transient usage) ride alongside.  Requests never started by run end are
+    censored out of the wait metrics and reported as ``n_unfinished``.
+    """
+    summary = fleet.summary(requests)
+    tick_s = float(config.tick_s)
+    waits = np.asarray([q.wait for q in requests if q.wait is not None],
+                       float) * tick_s
+    series = {
+        "short_waits": waits,
+        "active_transients": np.asarray(fleet.transient_counts, float),
+        "transient_lifetimes": np.asarray(fleet.lifetimes, float) * tick_s,
+    }
+    wl_meta = dict(workload_meta or {})
+    pinned = wl_meta.pop("pinned_per_tick", None)
+    if pinned is not None:
+        series["pinned_replicas"] = np.asarray(pinned, float)
+    metrics = {
+        "short_avg_wait_s": float(np.mean(waits)) if waits.size else float("nan"),
+        "short_max_wait_s": float(np.max(waits)) if waits.size else float("nan"),
+        "short_p50_wait_s": _pctl(waits, 50),
+        "short_p90_wait_s": _pctl(waits, 90),
+        "short_p99_wait_s": _pctl(waits, 99),
+        "avg_active_transients": float(summary["avg_active_transients"]),
+        "peak_active_transients": float(summary["peak_active_transients"]),
+        "n_requests": float(summary["n_requests"]),
+        "n_done": float(summary["n_done"]),
+        "n_unfinished": float(summary["n_requests"] - summary["n_done"]),
+        "n_hedges": float(summary["n_hedges"]),
+        "n_hedge_cancelled": float(summary["n_hedge_cancelled"]),
+        "n_revocations": float(summary["n_revocations"]),
+        "n_transients_used": float(summary["n_transients_used"]),
+        "avg_transient_lifetime_s": float(summary["avg_lifetime_ticks"])
+        * tick_s,
+    }
+    cfg = asdict(config) if is_dataclass(config) else dict(config or {})
+    meta = {"workload": _jsonable(wl_meta)}
+    if trace is not None:
+        meta["trace"] = _trace_meta(trace)
+    return RunResult(
+        engine="serving", scenario=scenario, config=_jsonable(cfg),
+        overrides=dict(overrides or {}), metrics=metrics, series=series,
+        seed=seed, sim_seed=sim_seed, quick=quick,
         wall_time_s=float(wall_time_s), meta=meta)

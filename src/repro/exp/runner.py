@@ -3,7 +3,8 @@
 
 Engines are pluggable adapters registered in :data:`ENGINES`; both built-ins
 (``des`` — the exact discrete-event simulator, ``fluid`` — the JAX slotted
-model) take the same call signature and emit the same
+model, ``serving`` — the pod-level elastic serving fleet driven by the same
+trace builders) take the same call signature and emit the same
 :class:`~repro.exp.results.RunResult` schema, so a consumer can flip engines
 with one string.  ``sweep`` fans a scenario out over a parameter grid:
 serial (optionally multiprocess) DES runs per grid point, or the vmapped
@@ -38,7 +39,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.exp.results import (RunResult, _jsonable, _load_npz, _save_npz,
-                               from_fluid_output, from_sim_result)
+                               from_fluid_output, from_serving_fleet,
+                               from_sim_result)
 from repro.sched import Scenario, get_scenario
 
 # --------------------------------------------------------- declarative overrides
@@ -206,8 +208,39 @@ def _run_fluid(sc: Scenario, *, quick: bool, seed: int, sim_seed: int = 0,
         quick=quick, seed=seed, wall_time_s=time.time() - t0, trace=trace)
 
 
+def _run_serving(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
+                 trace, trace_overrides: Dict, sim_overrides: Dict,
+                 decode_fn=None) -> RunResult:
+    """Pod-level serving engine (``repro.runtime.serving``): the scenario's
+    trace becomes a decode-request stream + long-job pinning signal, routed
+    by the scenario's short-placement policy over an ``ElasticServingFleet``.
+    ``decode_fn`` optionally runs a real jitted model decode step per tick
+    (examples/serve_bursty.py)."""
+    from repro.runtime.serving import (ElasticServingFleet,
+                                       build_serving_workload)
+
+    t0 = time.time()
+    if trace is None:
+        trace = sc.trace(quick=quick, seed=seed,
+                         trace_overrides=trace_overrides)
+    cfg = sc.serving_config(quick=quick, sim_overrides=sim_overrides)
+    requests, pinned_fn, max_ticks, wl_meta = build_serving_workload(trace,
+                                                                     cfg)
+    _, short_pol = sc.policies()
+    fleet = ElasticServingFleet.from_config(
+        cfg, short_policy=short_pol, decode_fn=decode_fn, seed=sim_seed,
+        drain_preference=sc.drain_preference)
+    fleet.run(requests, pinned_fn, max_ticks)
+    return from_serving_fleet(
+        fleet, requests, scenario=sc.name, config=cfg, workload_meta=wl_meta,
+        overrides={"trace": trace_overrides, "sim": sim_overrides},
+        quick=quick, seed=seed, sim_seed=sim_seed,
+        wall_time_s=time.time() - t0, trace=trace)
+
+
 register_engine("des", _run_des)
 register_engine("fluid", _run_fluid)
+register_engine("serving", _run_serving)
 
 
 # ---------------------------------------------------------------- grid sweeps

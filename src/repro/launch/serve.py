@@ -1,24 +1,61 @@
-"""Serving launcher: batched prefill + decode for any ``--arch``.
+"""Serving launcher: batched prefill + decode for any ``--arch``, or a
+scenario-driven elastic serving fleet through the unified experiment API.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --batch 4 --prompt 32 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --scenario serve_yahoo --quick \
+      --out artifacts/serve_yahoo.runresult.npz
+
+``--scenario`` runs ``repro.exp.run(scenario, engine="serving")`` — the
+scenario's trace becomes the request stream + pinning signal and the fleet
+metrics print like ``repro.launch.sim`` — while ``--arch`` keeps the raw
+model decode path.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+
+
+def _run_fleet(args) -> None:
+    from repro.exp import run as exp_run
+
+    res = exp_run(args.scenario, engine="serving", quick=args.quick,
+                  seed=args.seed, sim_seed=args.seed)
+    print(f"scenario: {args.scenario} | engine: serving | "
+          f"workload: {res.meta['workload']}")
+    print(json.dumps(res.metrics, indent=1, default=float))
+    if args.out:
+        path = res.save(args.out)
+        print(f"RunResult saved to {path}", file=sys.stderr)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="raw decode benchmark for one model config")
+    ap.add_argument("--scenario", default=None,
+                    help="serving-fleet scenario (repro.sched registry) run "
+                         "through repro.exp with engine='serving'")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized scenario scale (with --scenario)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="persist the RunResult (with --scenario)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.scenario:
+        _run_fleet(args)
+        return
+    if not args.arch:
+        ap.error("one of --arch or --scenario is required")
 
     import jax
     import jax.numpy as jnp

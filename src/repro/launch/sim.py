@@ -9,6 +9,8 @@ the override flags are generated from the declarative
   PYTHONPATH=src python -m repro.launch.sim --list
   PYTHONPATH=src python -m repro.launch.sim --scenario spot_r3 --fluid \
       --out artifacts/spot_r3.runresult.npz
+  PYTHONPATH=src python -m repro.launch.sim --scenario serve_yahoo --quick \
+      --engine serving
 
 ``--out`` persists the full :class:`~repro.exp.RunResult` — time series
 included (per-task waits for the DES, the per-slot fluid trajectories that
@@ -41,8 +43,12 @@ def main():
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized scale (400 servers / 4 h)")
+    ap.add_argument("--engine", default=None,
+                    choices=["des", "fluid", "serving"],
+                    help="engine adapter (default des; 'serving' runs the "
+                         "pod-level elastic serving fleet)")
     ap.add_argument("--fluid", action="store_true",
-                    help="use the JAX slotted simulator instead of the DES")
+                    help="alias for --engine fluid")
     ap.add_argument("--out", default=None, metavar="FILE",
                     help="persist the full RunResult (series included) "
                          "as npz, or JSON with a .json suffix")
@@ -70,7 +76,8 @@ def main():
                       trace_overrides=trace_over)
     print(f"scenario: {sc.name} | trace: jobs={tr.n_jobs} tasks={tr.n_tasks} "
           f"util={tr.meta['utilization']:.3f}")
-    res = exp_run(sc, engine="fluid" if args.fluid else "des",
+    engine = args.engine or ("fluid" if args.fluid else "des")
+    res = exp_run(sc, engine=engine,
                   quick=args.quick, seed=args.seed, sim_seed=args.seed,
                   trace=tr, trace_overrides=trace_over,
                   sim_overrides=sim_over)

@@ -1,4 +1,6 @@
 from repro.runtime.batching import ContinuousBatcher, GenRequest  # noqa: F401
 from repro.runtime.elastic import ElasticTrainer  # noqa: F401
-from repro.runtime.serving import ElasticServingFleet, Request  # noqa: F401
+from repro.runtime.serving import (ElasticServingFleet, Request,  # noqa: F401
+                                   ServingFleetConfig,
+                                   build_serving_workload)
 from repro.runtime.straggler import StragglerWatchdog  # noqa: F401

@@ -175,9 +175,8 @@ class ElasticTrainer:
         return state
 
     def _abstract_state(self):
-        params = self.model.init_shape()
-        return {
-            "params": params,
-            "opt": jax.eval_shape(self.opt.init, params),
-            "step": jax.ShapeDtypeStruct((), jax.numpy.int32),
-        }
+        """Abstract TrainState for restore-from-cold, eval-shaped through
+        the SAME constructor the live path uses (``opt.init_state``) so the
+        checkpoint tree cannot drift from the live layout (e.g. int8-moment
+        slot trees, error-feedback slots)."""
+        return jax.eval_shape(self.opt.init_state, self.model.init_shape())

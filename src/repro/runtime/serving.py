@@ -8,26 +8,72 @@ watches l_r = pinned / total and rents transient replicas against the
 budget K = r * N_s * p; removals drain (finish queued requests, take no new
 ones), with the drain victim chosen by the spec's ``drain_preference``.
 
+Request routing goes through the same ``repro.sched.policy`` short-placement
+layer the DES uses: on-demand replicas play the general partition (probed
+power-of-d, skipping pinned replicas), active transients play the protected
+short pool (the probe-failure fallback) — so ``EagleProbing``,
+``BurstGuardProbing`` per-class admission and ``SpotAwareProbing``
+revocation pricing all drive request placement unchanged.
+
 The fleet advances in ticks (1 tick = 1 decode step = one token for every
 active replica). ``decode_fn`` can be a real jitted model decode step — the
 examples run a reduced model for true end-to-end serving; tests omit it for
 speed (identical scheduling semantics either way).
 
 Hedging (paper §3.3 transient-safety rule): a request whose time on a
-transient replica exceeds ``hedge_factor x gen_len`` ticks is duplicated onto
-the on-demand reserve; first completion wins. Revocations take a transient
-replica (and its queue) away instantly; queued requests are re-routed.
+transient replica exceeds ``hedge_factor x gen_len`` ticks is *duplicated*
+onto the on-demand reserve — the original keeps running on the transient —
+and the first completion wins; the losing copy is cancelled. Revocations
+take a transient replica (and its queue) away instantly; queued requests
+are re-routed, except hedged ones whose on-demand copy already carries them.
+
+``build_serving_workload`` maps a ``repro.core.jobs.Trace`` onto the fleet
+(short tasks -> ``Request`` streams, the long class -> the ``pinned_fn``
+occupancy signal), which is what ``repro.exp.run(..., engine="serving")``
+drives.
 """
 
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.sched.controller import ControllerSpec, FleetView, select_drain
+from repro.sched.policy import EagleProbing, ShortPlacementPolicy
+
+
+@dataclass(frozen=True)
+class ServingFleetConfig:
+    """Resolved serving-fleet configuration (the ``engine="serving"``
+    analog of ``SimConfig``; ``Scenario.serving_config`` derives one from
+    the scenario's scale + sim kwargs + ``serving_kwargs``).
+
+    ``n_replicas`` is the base fleet the pinning signal is scaled against;
+    ``n_reserve`` adds serving-only on-demand replicas that long jobs never
+    pin (the static-budget axis of benchmarks/serving_delay.py). Durations
+    are seconds; ``tick_s`` converts them to decode ticks.
+    """
+
+    n_replicas: int = 80
+    n_reserve: int = 0
+    max_transient: int = 0  # K = r * N_s * p
+    threshold: float = 0.75  # L_r^T over the pod fleet
+    provisioning_delay: float = 60.0  # seconds
+    hedge_factor: float = 4.0
+    revocation_mttf: float = 0.0  # seconds; 0 = no revocations
+    tick_s: float = 1.0  # seconds of trace time per decode tick
+    pin_scale: float = 1.0  # scales the long-occupancy pinning signal
+    max_requests: int = 20000  # cap on the request stream length
+    probe_d: int = 2
+    probe_retries: int = 3
+    n_general_ref: int = 0  # trace general-partition size (pinning scale)
+
+    def ticks(self, seconds: float) -> int:
+        return max(int(round(seconds / self.tick_s)), 1)
 
 
 @dataclass
@@ -38,6 +84,13 @@ class Request:
     start: Optional[int] = None
     finish: Optional[int] = None
     hedged: bool = False
+    job_id: int = 0
+    #: set on hedge copies -> the original request (wait/finish bookkeeping
+    #: lives on the original; first completion wins)
+    primary: Optional["Request"] = None
+    #: tick this request last joined a replica queue (None = at arrival);
+    #: the §3.3 hedge clock measures time *on the transient*, not age
+    routed_at: Optional[int] = None
 
     @property
     def wait(self) -> Optional[int]:
@@ -55,10 +108,96 @@ class _Replica:
     draining: bool = False
     online_at: int = 0
     offline_at: Optional[int] = None
+    #: cached queued + active decode ticks — the policy view's pending_work
+    #: must be O(1), not O(queue), per probe (invariant kept by enqueue /
+    #: the fleet's advance/displace/revoke paths)
+    pending_ticks: int = 0
 
     @property
     def load(self) -> int:
         return len(self.queue) + (1 if self.active else 0)
+
+    def enqueue(self, req: Request, t: Optional[int] = None) -> None:
+        if t is not None:
+            req.routed_at = t
+        self.queue.append(req)
+        self.pending_ticks += req.gen_len
+
+
+# ------------------------------------------------- sched-policy cluster view
+
+class _ReplicaView:
+    """Duck-typed ``Server`` stand-in so ``repro.sched.policy`` objects read
+    replica state directly (pending decode ticks, pinning, queue classes)."""
+
+    __slots__ = ("_r",)
+
+    def __init__(self, rep: _Replica):
+        self._r = rep
+
+    #: stands in for the unknown remaining time of a pinning long job, the
+    #: way a DES server's pending_work includes its long task: the
+    #: least-loaded fallback must prefer any unpinned replica over a pinned
+    #: one (a request queued behind a pin can strand indefinitely)
+    _PIN_PENALTY = 1e12
+
+    @property
+    def pending_work(self) -> float:
+        r = self._r
+        return float(r.pending_ticks) + (self._PIN_PENALTY if r.pinned
+                                         else 0.0)
+
+    @property
+    def long_occupied(self) -> bool:
+        return self._r.pinned
+
+    @property
+    def kind(self) -> str:
+        return "transient" if self._r.kind == "transient" else "general"
+
+    @property
+    def running(self):
+        a = self._r.active
+        return None if a is None else (float(a.gen_len), float(a.arrival),
+                                       False, a.job_id)
+
+    @property
+    def queue(self):
+        # lazy: BurstGuard's backlog scan breaks at scan_cap entries, so
+        # materializing the whole deque would defeat its O(cap) bound
+        return ((float(q.gen_len), float(q.arrival), False, q.job_id)
+                for q in self._r.queue)
+
+
+@dataclass
+class _ViewConfig:
+    probe_d: int = 2
+    probe_retries: int = 3
+    revocation_mttf: float = 0.0  # ticks (SpotAwareProbing's rework price)
+
+
+class _ClusterView:
+    """The ``PlacementPolicy.bind`` protocol over the fleet: ``general_ids``
+    are online on-demand replicas (long-pinnable), ``short_pool()`` is the
+    active-transient protected pool."""
+
+    def __init__(self, fleet: "ElasticServingFleet", cfg: _ViewConfig,
+                 rng: np.random.Generator):
+        self._fleet = fleet
+        self.cfg = cfg
+        self.rng = rng
+        self.servers: Dict[int, _ReplicaView] = {}
+
+    def register(self, rep: _Replica) -> None:
+        self.servers[rep.rid] = _ReplicaView(rep)
+
+    @property
+    def general_ids(self) -> List[int]:
+        return [r.rid for r in self._fleet.replicas
+                if r.kind == "ondemand" and r.offline_at is None]
+
+    def short_pool(self) -> List[int]:
+        return [r.rid for r in self._fleet._transients()]
 
 
 class ElasticServingFleet:
@@ -67,7 +206,9 @@ class ElasticServingFleet:
                  hedge_factor: float = 4.0,
                  decode_fn: Optional[Callable] = None,
                  revocation_mttf_ticks: float = 0.0, seed: int = 0,
-                 spec: Optional[ControllerSpec] = None):
+                 spec: Optional[ControllerSpec] = None,
+                 short_policy: Optional[ShortPlacementPolicy] = None,
+                 probe_d: int = 2, probe_retries: int = 3):
         self.spec = spec or ControllerSpec(threshold, max_transient,
                                            provisioning_delay)
         self.provisioning_delay = int(self.spec.provisioning_delay)
@@ -81,9 +222,37 @@ class ElasticServingFleet:
         self.lifetimes: List[int] = []
         self.n_revocations = 0
         self.n_hedges = 0
+        self.n_hedge_cancelled = 0
         self._next_rid = n_ondemand
         self._active_area = 0.0
         self._ticks = 0
+        self.peak_active = 0
+        self.transient_counts: List[int] = []  # per-tick online transients
+        self._by_rid: Dict[int, _Replica] = {r.rid: r for r in self.replicas}
+        # routing rng is independent of the revocation stream so the same
+        # seed yields the same placement regardless of MTTF settings
+        self._view = _ClusterView(
+            self, _ViewConfig(probe_d, probe_retries, revocation_mttf_ticks),
+            np.random.default_rng([seed, 1]))
+        for r in self.replicas:
+            self._view.register(r)
+        self.short_policy = (short_policy or EagleProbing()).bind(self._view)
+
+    @classmethod
+    def from_config(cls, cfg: ServingFleetConfig, *,
+                    short_policy: Optional[ShortPlacementPolicy] = None,
+                    decode_fn: Optional[Callable] = None, seed: int = 0,
+                    drain_preference: str = "least_loaded"
+                    ) -> "ElasticServingFleet":
+        spec = ControllerSpec(cfg.threshold, cfg.max_transient,
+                              cfg.ticks(cfg.provisioning_delay),
+                              drain_preference)
+        mttf = cfg.revocation_mttf / cfg.tick_s if cfg.revocation_mttf else 0.0
+        return cls(cfg.n_replicas + cfg.n_reserve,
+                   hedge_factor=cfg.hedge_factor, decode_fn=decode_fn,
+                   revocation_mttf_ticks=mttf, seed=seed, spec=spec,
+                   short_policy=short_policy, probe_d=cfg.probe_d,
+                   probe_retries=cfg.probe_retries)
 
     # ------------------------------------------------------------- internals
 
@@ -94,13 +263,59 @@ class ElasticServingFleet:
     def _transients(self) -> List[_Replica]:
         return [r for r in self._stable() if r.kind == "transient"]
 
-    def _route(self, req: Request):
-        cands = [r for r in self._stable() if not r.pinned]
-        if not cands:  # everything pinned: queue on least loaded on-demand
-            cands = [r for r in self.replicas
-                     if r.offline_at is None and r.kind == "ondemand"]
-        tgt = min(cands, key=lambda r: r.load)
-        tgt.queue.append(req)
+    def _online_transients(self) -> List[_Replica]:
+        """All online transients, including draining ones (they still serve
+        and are still paid for — the capacity-area metric must count them)."""
+        return [r for r in self.replicas
+                if r.kind == "transient" and r.offline_at is None]
+
+    @staticmethod
+    def _primary_of(req: Request) -> Request:
+        return req.primary if req.primary is not None else req
+
+    def _finished(self, req: Request) -> bool:
+        return self._primary_of(req).finish is not None
+
+    def _route(self, req: Request, t: int):
+        sid = self.short_policy.select(float(req.gen_len), req.job_id)
+        self._by_rid[sid].enqueue(req, t)
+
+    def _bring_online(self, t: int) -> _Replica:
+        nr = _Replica(self._next_rid, "transient", online_at=t)
+        self._next_rid += 1
+        self.replicas.append(nr)
+        self._by_rid[nr.rid] = nr
+        self._view.register(nr)
+        return nr
+
+    def _apply_pinning(self, want: int, t: int):
+        """Pin the first ``want`` on-demand replicas (long-job occupancy).
+
+        ``want`` is clamped to the on-demand count — transients are never
+        pinned. A replica transitioning to pinned hands its queue back to
+        the router and requeues its active request (progress restarts
+        elsewhere): the long job takes the replica whole."""
+        ond = [r for r in self.replicas
+               if r.kind == "ondemand" and r.offline_at is None]
+        want = min(want, len(ond))
+        newly: List[_Replica] = []
+        for i, r in enumerate(ond):
+            if i < want and not r.pinned:
+                newly.append(r)
+            r.pinned = i < want
+        for r in newly:
+            displaced = list(r.queue)
+            r.queue.clear()
+            if r.active is not None:
+                req = r.active
+                r.active = None
+                if req.primary is None and not req.hedged:
+                    req.start = None  # no live copy elsewhere: full restart
+                displaced.insert(0, req)
+            r.pending_ticks = 0
+            for req in displaced:
+                if not self._finished(req):
+                    self._route(req, t)
 
     def _controller_tick(self, t: int):
         stable = self._stable()
@@ -117,7 +332,10 @@ class ElasticServingFleet:
         for _ in range(max(delta, 0)):
             self.pending_online.append(t + self.provisioning_delay)
         for _ in range(max(-delta, 0)):
-            tr = select_drain(self._transients(),
+            cands = self._transients()
+            if not cands:  # guard: never drain more than remain
+                break
+            tr = select_drain(cands,
                               preference=self.spec.drain_preference,
                               load_key=lambda r: r.load,
                               online_key=lambda r: r.online_at)
@@ -126,18 +344,31 @@ class ElasticServingFleet:
     def _advance_replica(self, r: _Replica, t: int):
         if r.pinned:
             return
-        if r.active is None and r.queue:
-            r.active = r.queue.popleft()
-            if r.active.start is None:
-                r.active.start = t
-            r.tokens_left = r.active.gen_len
+        if r.active is not None and self._finished(r.active):
+            # the other copy of a hedged pair already won: cancel this one
+            self.n_hedge_cancelled += 1
+            r.pending_ticks -= r.tokens_left
+            r.active = None
+        while r.active is None and r.queue:
+            req = r.queue.popleft()
+            if self._finished(req):  # cancelled duplicate, never started
+                self.n_hedge_cancelled += 1
+                r.pending_ticks -= req.gen_len
+                continue
+            r.active = req
+            prim = self._primary_of(req)
+            if prim.start is None:
+                prim.start = t
+            r.tokens_left = req.gen_len  # pending_ticks already counts it
         if r.active is not None:
             if self.decode_fn is not None:
                 self.decode_fn(r.rid)
             r.tokens_left -= 1
+            r.pending_ticks -= 1
             if r.tokens_left <= 0:
-                if r.active.finish is None:
-                    r.active.finish = t + 1
+                prim = self._primary_of(r.active)
+                if prim.finish is None:  # first completion wins
+                    prim.finish = t + 1
                 r.active = None
         if r.draining and r.active is None and not r.queue:
             r.offline_at = t
@@ -149,13 +380,24 @@ class ElasticServingFleet:
         if not reserve:
             return
         for r in self._transients():
-            for req in list(r.queue):
-                if (not req.hedged
-                        and t - req.arrival > self.hedge_factor * req.gen_len):
+            cands = list(r.queue)
+            if r.active is not None:
+                cands.append(r.active)
+            for req in cands:
+                if (req.hedged or req.primary is not None
+                        or self._finished(req)):
+                    continue
+                on_transient = t - (req.routed_at if req.routed_at is not None
+                                    else req.arrival)
+                if on_transient > self.hedge_factor * req.gen_len:
+                    # §3.3: duplicate onto the on-demand reserve, first
+                    # completion wins — the original keeps its place here
                     req.hedged = True
                     self.n_hedges += 1
-                    r.queue.remove(req)
-                    min(reserve, key=lambda x: x.load).queue.append(req)
+                    copy = Request(req.rid, req.arrival, req.gen_len,
+                                   hedged=True, job_id=req.job_id,
+                                   primary=req)
+                    min(reserve, key=lambda x: x.load).enqueue(copy, t)
 
     def _maybe_revoke(self, t: int):
         if self.revocation_mttf <= 0:
@@ -168,11 +410,39 @@ class ElasticServingFleet:
                 requeue = list(r.queue) + ([r.active] if r.active else [])
                 r.queue.clear()
                 r.active = None
+                r.pending_ticks = 0
                 for req in requeue:
-                    req.start = None  # restarts from scratch elsewhere
-                    self._route(req)
+                    if self._finished(req):
+                        continue
+                    if req.hedged and req.primary is None:
+                        continue  # the on-demand copy carries it (§3.3)
+                    if req.primary is None:
+                        req.start = None  # restarts from scratch elsewhere
+                    self._route(req, t)
 
     # ------------------------------------------------------------------ run
+
+    def _tick(self, t: int, new_requests=(), pinned: Optional[int] = None):
+        """One decode tick; ``run`` drives this, tests may drive it directly
+        (``pinned`` is the long-occupancy target for this tick)."""
+        if pinned is not None:
+            self._apply_pinning(pinned, t)
+        for due in [x for x in self.pending_online if x <= t]:
+            self.pending_online.remove(due)
+            self._bring_online(t)
+        for req in new_requests:
+            self._route(req, t)
+        self._controller_tick(t)
+        self._maybe_revoke(t)
+        self._maybe_hedge(t)
+        for r in self.replicas:
+            if r.offline_at is None:
+                self._advance_replica(r, t)
+        online = len(self._online_transients())
+        self._active_area += online
+        self.peak_active = max(self.peak_active, online)
+        self.transient_counts.append(online)
+        self._ticks += 1
 
     def run(self, requests: List[Request], pinned_fn: Callable[[int], int],
             max_ticks: int):
@@ -182,29 +452,7 @@ class ElasticServingFleet:
         for q in requests:
             by_arrival.setdefault(q.arrival, []).append(q)
         for t in range(max_ticks):
-            # long-job occupancy on the on-demand fleet
-            want = min(pinned_fn(t), len(self.replicas))
-            ond = [r for r in self.replicas
-                   if r.kind == "ondemand" and r.offline_at is None]
-            for i, r in enumerate(ond):
-                r.pinned = i < want
-            # transient arrivals
-            for due in [x for x in self.pending_online if x <= t]:
-                self.pending_online.remove(due)
-                nr = _Replica(self._next_rid, "transient", online_at=t)
-                self._next_rid += 1
-                self.replicas.append(nr)
-            # new requests
-            for req in by_arrival.get(t, ()):  # route at arrival tick
-                self._route(req)
-            self._controller_tick(t)
-            self._maybe_revoke(t)
-            self._maybe_hedge(t)
-            for r in self.replicas:
-                if r.offline_at is None:
-                    self._advance_replica(r, t)
-            self._active_area += len(self._transients())
-            self._ticks += 1
+            self._tick(t, by_arrival.get(t, ()), pinned=pinned_fn(t))
         return self.summary(requests)
 
     def summary(self, requests: List[Request]) -> Dict[str, float]:
@@ -217,9 +465,85 @@ class ElasticServingFleet:
             "p99_wait": float(np.percentile(waits, 99)) if waits else float("inf"),
             "max_wait": float(np.max(waits)) if waits else float("inf"),
             "avg_active_transients": self._active_area / max(self._ticks, 1),
+            "peak_active_transients": self.peak_active,
             "n_transients_used": len([r for r in self.replicas
                                       if r.kind == "transient"]),
             "avg_lifetime_ticks": float(np.mean(self.lifetimes)) if self.lifetimes else 0.0,
             "n_revocations": self.n_revocations,
             "n_hedges": self.n_hedges,
+            "n_hedge_cancelled": self.n_hedge_cancelled,
         }
+
+
+# ------------------------------------------------------- trace -> workload
+
+def build_serving_workload(trace, cfg: ServingFleetConfig
+                           ) -> Tuple[List[Request], Callable[[int], int],
+                                      int, Dict]:
+    """Map a ``repro.core.jobs.Trace`` onto the serving fleet.
+
+    Short-class tasks become decode ``Request``s (one per task; ``gen_len``
+    is the task duration in ticks) and the long class becomes the
+    ``pinned_fn`` occupancy signal: per-tick long-task concurrency, scaled
+    from the trace's general partition onto the fleet
+    (``conc * n_replicas / n_general * pin_scale``, clamped to the base
+    fleet — reserve replicas are serving-only).
+
+    Returns ``(requests, pinned_fn, max_ticks, meta)``; ``max_ticks`` adds a
+    25% drain tail past the last arrival. The request stream is capped at
+    ``cfg.max_requests`` earliest arrivals (count reported in ``meta``).
+    """
+    tick_s = cfg.tick_s
+    horizon_ticks = max(int(math.ceil(trace.horizon / tick_s)), 1)
+    requests: List[Request] = []
+    long_starts: List[float] = []
+    long_ends: List[float] = []
+    rid = 0
+    for job in trace.jobs:
+        if job.is_long:
+            for d in job.durations:
+                long_starts.append(job.arrival)
+                long_ends.append(job.arrival + float(d))
+        else:
+            a = min(int(job.arrival / tick_s), horizon_ticks - 1)
+            for d in job.durations:
+                requests.append(Request(
+                    rid, a, gen_len=max(int(round(d / tick_s)), 1),
+                    job_id=job.job_id))
+                rid += 1
+    requests.sort(key=lambda q: (q.arrival, q.rid))
+    n_dropped = max(len(requests) - cfg.max_requests, 0)
+    if n_dropped:
+        requests = requests[:cfg.max_requests]
+
+    diff = np.zeros(horizon_ticks + 1)
+    if long_starts:
+        s = np.minimum((np.asarray(long_starts) / tick_s).astype(int),
+                       horizon_ticks)
+        e = np.minimum(np.ceil(np.asarray(long_ends) / tick_s).astype(int),
+                       horizon_ticks)
+        np.add.at(diff, s, 1.0)
+        np.add.at(diff, e, -1.0)
+    conc = np.cumsum(diff)[:horizon_ticks]
+    n_general = cfg.n_general_ref or int(trace.meta.get("n_servers", 0)) \
+        or cfg.n_replicas
+    pinned = np.clip(
+        np.rint(conc * (cfg.n_replicas / n_general) * cfg.pin_scale),
+        0, cfg.n_replicas).astype(int)
+
+    def pinned_fn(t: int) -> int:
+        return int(pinned[t]) if t < pinned.size else 0
+
+    last_arrival = requests[-1].arrival if requests else 0
+    max_ticks = int(min(horizon_ticks, last_arrival + 1) * 1.25) + 1
+    meta = {
+        "horizon_ticks": horizon_ticks,
+        "max_ticks": max_ticks,
+        "n_requests": len(requests),
+        "n_requests_dropped": n_dropped,
+        "n_long_tasks": len(long_starts),
+        "avg_pinned": float(pinned.mean()) if pinned.size else 0.0,
+        "peak_pinned": int(pinned.max()) if pinned.size else 0,
+    }
+    return requests, pinned_fn, max_ticks, {"pinned_per_tick": pinned,
+                                            **meta}

@@ -50,6 +50,9 @@ class Scenario:
     short_policy: str = "eagle"
     policy_kwargs: Dict = field(default_factory=dict)
     drain_preference: str = "least_loaded"
+    #: serving-engine-only knobs (ServingFleetConfig fields that have no
+    #: SimConfig counterpart, e.g. pin_scale / n_reserve / hedge_factor)
+    serving_kwargs: Dict = field(default_factory=dict)
 
     # ------------------------------------------------------------- components
 
@@ -108,6 +111,40 @@ class Scenario:
         return simulate(trace, cfg, long_policy=long_pol,
                         short_policy=short_pol,
                         controller=self.controller(cfg))
+
+    def serving_config(self, *, quick: bool = False,
+                       sim_overrides: Optional[Dict] = None):
+        """Resolve a :class:`~repro.runtime.serving.ServingFleetConfig` for
+        ``repro.exp.run(..., engine="serving")``.
+
+        Shared knobs (threshold, provisioning_delay, revocation_mttf,
+        probe_*) and the transient budget K = r * N_s * p flow through the
+        scenario's ``SimConfig`` — the fleet is sized like the short
+        partition (N_s replicas) and pinning is scaled against the general
+        partition. Serving-only keys in ``sim_overrides`` (``max_transient``,
+        ``n_reserve``, ``pin_scale``, ...) override ``serving_kwargs``, so
+        they work as pointwise ``sweep`` axes.
+        """
+        from dataclasses import fields as _fields
+
+        from repro.runtime.serving import ServingFleetConfig
+
+        over = dict(sim_overrides or {})
+        sim_fields = {f.name for f in _fields(SimConfig)}
+        serve_fields = {f.name for f in _fields(ServingFleetConfig)}
+        serve_over = {k: over.pop(k) for k in list(over)
+                      if k in serve_fields - sim_fields}
+        cfg = self.sim_config(quick=quick, sim_overrides=over)
+        kw = dict(n_replicas=cfg.n_short_reserved,
+                  max_transient=cfg.max_transient,
+                  threshold=cfg.threshold,
+                  provisioning_delay=cfg.provisioning_delay,
+                  revocation_mttf=cfg.revocation_mttf,
+                  probe_d=cfg.probe_d, probe_retries=cfg.probe_retries,
+                  n_general_ref=cfg.n_general)
+        kw.update(self.serving_kwargs)
+        kw.update(serve_over)
+        return ServingFleetConfig(**kw)
 
     def fluid_params(self, *, quick: bool = False) -> FluidPolicyParams:
         pol = make_short_policy(self.short_policy, **self.policy_kwargs)
@@ -220,6 +257,47 @@ register_scenario(Scenario(
     description="r=3 with heterogeneous server speeds (30% of the general "
                 "partition at 0.6x) — co-located-hardware regime",
     **_coaster(3.0, hetero_slow_frac=0.3, hetero_slow_speed=0.6)))
+# ---------------- serving-engine scenarios (repro.runtime.serving) ---------
+#
+# Runnable on all three engines; engine="serving" maps short tasks to decode
+# requests and the long class to replica pinning (see Scenario.serving_config
+# and repro.runtime.serving.build_serving_workload).  The serving fleet is
+# short-partition-sized, so the controller's transient rentals are what keep
+# request delay bounded while long jobs pin most of the pods.
+
+#: shared serving calibration: p=0.5 r=3 budget, pod-level threshold 0.5
+#: (the fleet is short-partition-sized, so the controller must keep roughly
+#: one serving replica per pinned replica), fast (30 s) provisioning.
+#: ``pin_scale`` calibrates the trace's offered long concurrency onto pod
+#: co-location pressure; tuned per trace so pinning saturates during bursts.
+_SERVE = dict(replace_fraction=0.5, cost_ratio=3.0, threshold=0.5,
+              provisioning_delay=30.0)
+
+register_scenario(Scenario(
+    name="serve_yahoo",
+    description="elastic serving fleet on the Yahoo bursty trace: short "
+                "tasks as decode requests, long class pins replicas "
+                "(engine='serving')",
+    sim_kwargs=dict(_SERVE),
+    serving_kwargs=dict(pin_scale=1.3)))
+register_scenario(Scenario(
+    name="serve_flash_crowd",
+    description="serving fleet under flash-crowd request spikes with "
+                "BurstGuard per-class admission on request routing",
+    trace_fn="flash_crowd_like",
+    short_policy="burst_guard", policy_kwargs=dict(guard_frac=0.5),
+    sim_kwargs=dict(_SERVE),
+    serving_kwargs=dict(pin_scale=2.2)))
+register_scenario(Scenario(
+    name="serve_spot",
+    description="serving fleet on spot transients (1 h MTTF): "
+                "revocation-priced routing, §3.3 hedge duplication to the "
+                "on-demand reserve, oldest-first drain",
+    short_policy="spot_aware",
+    drain_preference="oldest",
+    sim_kwargs=dict(_SERVE, revocation_mttf=3600.0),
+    serving_kwargs=dict(pin_scale=1.3)))
+
 register_scenario(Scenario(
     name="spot_diurnal_r3",
     description="r=3 spot-aware under diurnal arrivals with 2 h MTTF "

@@ -79,6 +79,71 @@ def test_fluid_engine_same_schema_and_series_kept():
         rr.cdf("short_waits")
 
 
+# ---------------------------------------------------------- serving engine
+
+#: serving presets registered by the scenario catalog
+SERVE_PRESETS = ("serve_yahoo", "serve_flash_crowd", "serve_spot")
+SERVE_KW = dict(quick=True, seed=7, sim_seed=3,
+                trace_overrides=dict(SMALL, horizon=2 * 3600.0))
+
+
+def test_serving_engine_schema_all_presets(tmp_path):
+    for name in SERVE_PRESETS:
+        rr = run(name, "serving", **SERVE_KW)
+        assert rr.engine == "serving" and rr.scenario == name
+        assert all(m in rr.metrics for m in CANONICAL_METRICS), name
+        for extra in ("n_hedges", "n_revocations", "n_done"):
+            assert extra in rr.metrics, name
+        # per-request wait series survives, percentile guard shared
+        assert rr.metrics["short_p90_wait_s"] == _pctl(
+            rr.series["short_waits"], 90)
+        assert rr.series["active_transients"].size > 0
+        back = RunResult.load(rr.save(tmp_path / f"{name}.npz"))
+        assert back.equals(rr), name
+
+
+def test_serving_engine_deterministic():
+    """Same (scenario, seed) => identical RunResult JSON (wall time aside)."""
+    import dataclasses
+
+    a = run("serve_yahoo", "serving", **SERVE_KW)
+    b = run("serve_yahoo", "serving", **SERVE_KW)
+    a0 = dataclasses.replace(a, wall_time_s=0.0)
+    b0 = dataclasses.replace(b, wall_time_s=0.0)
+    assert a0.to_json(include_series=True) == b0.to_json(include_series=True)
+
+
+def test_serving_sweep_pointwise():
+    grid = {"threshold": [0.4, 0.6], "max_transient": [4, 12]}
+    sr = sweep("serve_yahoo", grid, engine="serving", **SERVE_KW)
+    assert sr.shape == (2, 2) and sr.engine == "serving"
+    pt = sr.at(threshold=0.4, max_transient=12)
+    one = run("serve_yahoo", "serving",
+              sim_overrides={"threshold": 0.4, "max_transient": 12},
+              **SERVE_KW)
+    assert pt["short_avg_wait_s"] == one.metrics["short_avg_wait_s"]
+    # a bigger transient budget can only help the short delay
+    lo = sr.at(threshold=0.4, max_transient=4)["short_avg_wait_s"]
+    assert pt["short_avg_wait_s"] <= lo
+
+
+def test_serving_beats_static_at_equal_budget():
+    """The acceptance comparison behind benchmarks/serving_delay.py: the
+    transient-backed preset beats a static fleet of equal-or-higher paid
+    budget on short_avg_wait_s."""
+    kw = dict(quick=True, seed=42, sim_seed=0)
+    elastic = run("serve_flash_crowd", "serving", **kw)
+    r = get_scenario("serve_flash_crowd").sim_config(quick=True).cost_ratio
+    paid = elastic.metrics["avg_active_transients"] / r
+    budget = int(np.ceil(paid))
+    static = run("serve_flash_crowd", "serving",
+                 sim_overrides={"max_transient": 0, "n_reserve": budget},
+                 **kw)
+    assert paid <= budget
+    assert elastic.metrics["short_avg_wait_s"] < \
+        static.metrics["short_avg_wait_s"]
+
+
 def test_unknown_engine_and_scenario_raise():
     with pytest.raises(ValueError, match="unknown engine"):
         run("coaster_r3", "no_such_engine", quick=True)
