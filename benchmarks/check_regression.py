@@ -1,0 +1,125 @@
+"""Benchmark-regression gate: compare fresh quick-scale benchmark artifacts
+(``artifacts/bench/*.json``) against the committed baselines under
+``benchmarks/baselines/``, with per-metric relative tolerances — CI fails
+on regression, not only on crashes.
+
+Baseline format (``benchmarks/baselines/<name>.quick.json``)::
+
+  {"artifact": "serving.json",
+   "metrics": {
+     "elastic.short_avg_wait_s":
+       {"value": 833.0, "rel_tol": 0.35, "direction": "lower"},
+     "slot_ladder.3.avg_slot_occupancy":
+       {"value": 0.054, "rel_tol": 0.35}}}
+
+The metric key is a dotted path into the artifact JSON (list indices as
+integers). ``direction`` names the *better* direction: ``"lower"`` fails
+only when the new value exceeds ``value * (1 + rel_tol)`` (a delay got
+worse), ``"higher"`` only when it drops below ``value * (1 - rel_tol)``
+(an improvement factor shrank), and ``"both"`` (the default) on any
+relative deviation beyond ``rel_tol`` — the drift detector for quantities
+with no better direction. ``abs_floor`` (default 1e-9) guards the relative
+comparison for near-zero baselines.
+
+Baselines are quick-scale: regenerate with
+``python -m benchmarks.run --quick --only serving`` and copy the gated
+values when a change intentionally moves them.
+
+Usage: PYTHONPATH=src python -m benchmarks.check_regression \
+           [--artifacts artifacts/bench] [--baselines benchmarks/baselines]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Optional, Sequence, Tuple
+
+DEFAULT_REL_TOL = 0.35
+
+
+def resolve_path(doc, dotted: str):
+    """Walk a dotted path through nested dicts/lists (ints index lists)."""
+    cur = doc
+    for part in dotted.split("."):
+        cur = cur[int(part)] if isinstance(cur, list) else cur[part]
+    return cur
+
+
+def check_metric(spec: dict, new: float) -> Tuple[bool, str]:
+    """-> (ok, detail). ``spec`` is one baseline metric entry."""
+    base = float(spec["value"])
+    tol = float(spec.get("rel_tol", DEFAULT_REL_TOL))
+    direction = spec.get("direction", "both")
+    denom = max(abs(base), float(spec.get("abs_floor", 1e-9)))
+    rel = (float(new) - base) / denom
+    if direction == "lower":
+        ok = rel <= tol
+    elif direction == "higher":
+        ok = rel >= -tol
+    elif direction == "both":
+        ok = abs(rel) <= tol
+    else:
+        return False, f"unknown direction {direction!r}"
+    return ok, (f"base={base:.6g} new={float(new):.6g} rel={rel:+.1%} "
+                f"tol={tol:.0%} ({direction})")
+
+
+def check_baseline(baseline_path: pathlib.Path,
+                   artifacts_dir: pathlib.Path) -> Tuple[int, int]:
+    """Check one baseline file; prints per-metric rows.
+    -> (n_checked, n_failed)."""
+    spec = json.loads(baseline_path.read_text())
+    artifact_path = artifacts_dir / spec["artifact"]
+    if not artifact_path.exists():
+        n = len(spec["metrics"])  # every gated metric is unchecked -> failed
+        print(f"  FAIL missing artifact {artifact_path} "
+              f"({n} gated metrics unchecked)")
+        return n, n
+    doc = json.loads(artifact_path.read_text())
+    checked = failed = 0
+    for dotted, mspec in spec["metrics"].items():
+        checked += 1
+        try:
+            new = float(resolve_path(doc, dotted))  # non-scalar -> TypeError
+        except (KeyError, IndexError, TypeError, ValueError):
+            failed += 1
+            print(f"  FAIL {dotted}: path missing or non-scalar "
+                  f"in {spec['artifact']}")
+            continue
+        ok, detail = check_metric(mspec, new)
+        failed += not ok
+        print(f"  {'pass' if ok else 'FAIL'} {dotted}: {detail}")
+    return checked, failed
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    root = pathlib.Path(__file__).resolve().parents[1]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=str(root / "artifacts" / "bench"))
+    ap.add_argument("--baselines",
+                    default=str(root / "benchmarks" / "baselines"))
+    args = ap.parse_args(argv)
+
+    baselines = sorted(pathlib.Path(args.baselines).glob("*.quick.json"))
+    if not baselines:
+        print(f"FAIL: no baselines found under {args.baselines}")
+        return 1
+    total = bad = 0
+    for bl in baselines:
+        print(f"{bl.name} -> {args.artifacts}")
+        checked, failed = check_baseline(bl, pathlib.Path(args.artifacts))
+        total += checked
+        bad += failed
+    if bad:
+        print(f"FAIL: {bad}/{total} gated metrics regressed "
+              f"(or were missing)")
+        return 1
+    print(f"PASS: {total} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

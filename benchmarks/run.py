@@ -52,10 +52,14 @@ def _derived(name: str, res: dict) -> str:
                 f"budget={res['best_budget']:.0f} delay={res['best_delay_s']:.1f}s")
     if name == "serving":
         el, ref = res["elastic"], res["equal_budget_static"]
+        lo, hi = res["slot_ladder"][0], res["slot_ladder"][-1]
         return (f"{res['scenario']}: elastic={el['short_avg_wait_s']:.0f}s "
                 f"@B={el['paid_budget']:.1f} static={ref['short_avg_wait_s']:.0f}s "
                 f"@B={ref['budget']:.0f} imp={res['improvement_x_at_equal_budget']:.1f}x "
-                f"save={res['budget_saving_frac']:.1%}")
+                f"save={res['budget_saving_frac']:.1%} | slots "
+                f"{lo['max_slots']:.0f}->{hi['max_slots']:.0f}: "
+                f"{lo['short_avg_wait_s']:.0f}s->{hi['short_avg_wait_s']:.0f}s "
+                f"occ={hi['avg_slot_occupancy']:.2f}")
     if name == "calibration":
         return (f"{len(res['scenarios'])} scenarios; mean |rel err| "
                 f"before={res['mean_abs_rel_err_before']:.1%} "

@@ -7,10 +7,18 @@ transients, ``n_reserve`` extra on-demand replicas = budget B at on-demand
 price) is compared against the *elastic* preset fleet, whose paid budget is
 ``avg_active_transients / r`` on-demand equivalents.  The deliverable
 numbers: the elastic fleet's short-delay improvement over the static
-baseline at equal-or-lower paid budget, and the budget saving.  All three
-serving presets also run once (elastic) for the summary table.
+baseline at equal-or-lower paid budget, and the budget saving.  The serving
+presets also run once each (elastic) for the summary table.
+
+The *slot ladder* replays the elastic preset at ``max_slots`` in {1,2,4,8}:
+with continuous batching one transient replica absorbs ``max_slots`` short
+requests concurrently, so the paper's delay-vs-budget tradeoff shifts — the
+controller rents the same transient budget (pinning-driven) while request
+delay collapses, and ``avg_slot_occupancy`` shows how much of the paid slot
+capacity each rung actually uses.
 
 Usage: PYTHONPATH=src python -m benchmarks.run --quick --only serving
+   or: PYTHONPATH=src python -m benchmarks.serving_delay --quick
 """
 
 from __future__ import annotations
@@ -22,14 +30,18 @@ from repro.sched import get_scenario
 
 #: static-budget ladder: extra on-demand reserve replicas
 BUDGETS = (1, 2, 4, 8)
-PRESETS = ("serve_yahoo", "serve_flash_crowd", "serve_spot")
+#: continuous-batching ladder: decode slots per replica
+SLOT_LADDER = (1, 2, 4, 8)
+PRESETS = ("serve_yahoo", "serve_flash_crowd", "serve_spot",
+           "serve_batched_yahoo", "serve_batched_flash_crowd")
 SCENARIO = "serve_flash_crowd"
 
 
 def _metrics(rr) -> dict:
     keep = ("short_avg_wait_s", "short_p90_wait_s", "short_p99_wait_s",
             "avg_active_transients", "peak_active_transients", "n_done",
-            "n_unfinished", "n_hedges", "n_revocations")
+            "n_unfinished", "n_hedges", "n_revocations",
+            "avg_slot_occupancy", "transient_slot_occupancy")
     return {k: rr.metrics[k] for k in keep}
 
 
@@ -63,10 +75,28 @@ def run(quick: bool = False) -> dict:
                                                 1e-9)
     saving = 1.0 - elastic["paid_budget"] / ref["budget"]
 
+    # slot-count ladder: the elastic fleet with max_slots decode slots per
+    # replica — same pinning-driven transient budget, delay collapses as one
+    # rented replica absorbs max_slots concurrent short requests
+    slot_ladder = []
+    ladder_rrs = {}
+    for m in SLOT_LADDER:
+        # max_slots=1 is the elastic run itself (same trace/config/seed)
+        rr = elastic_rr if m == 1 else \
+            exp.run(sc, sim_overrides={"max_slots": m}, **common)
+        ladder_rrs[m] = rr
+        row = {"max_slots": float(m), **_metrics(rr)}
+        row["paid_budget"] = row["avg_active_transients"] / r
+        slot_ladder.append(row)
+
+    # the flash-crowd presets reproduce runs above exactly (identical
+    # scenario/trace/seeds): reuse instead of re-simulating
+    reuse = {"serve_flash_crowd": elastic_rr,
+             "serve_batched_flash_crowd": ladder_rrs.get(4)}
     presets = {}
     for name in PRESETS:
-        rr = exp.run(name, engine="serving", quick=quick, seed=seed,
-                     sim_seed=0)
+        rr = reuse.get(name) or exp.run(name, engine="serving", quick=quick,
+                                        seed=seed, sim_seed=0)
         presets[name] = _metrics(rr)
 
     return {
@@ -77,5 +107,16 @@ def run(quick: bool = False) -> dict:
         "equal_budget_static": ref,
         "improvement_x_at_equal_budget": float(improvement),
         "budget_saving_frac": float(saving),
+        "slot_ladder": slot_ladder,
         "presets": presets,
     }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(run(quick=args.quick), indent=1, default=float))

@@ -20,9 +20,10 @@ of hand-rolling its own run loop:
 
 from repro.exp.compare import (COMPARE_METRICS, calibrate,  # noqa: F401
                                calibrate_registry, compare_engines)
-from repro.exp.results import (CANONICAL_METRICS, RunResult,  # noqa: F401
-                               from_fluid_output, from_serving_fleet,
-                               from_sim_result)
+from repro.exp.results import (CANONICAL_METRICS, REQUIRED_SERIES,  # noqa: F401
+                               RunResult, from_fluid_output,
+                               from_serving_fleet, from_sim_result,
+                               validate_run_result)
 from repro.exp.runner import (OVERRIDE_SPEC, Override,  # noqa: F401
                               SweepResult, engine_names, register_engine,
                               resolve_overrides, run, sweep)

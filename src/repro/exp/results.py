@@ -47,6 +47,51 @@ CANONICAL_METRICS = (
     "peak_active_transients",
 )
 
+#: per-engine series that must be present and non-empty in a valid persisted
+#: RunResult (engines may emit more; e.g. the DES's transient_lifetimes is
+#: legitimately empty when no transient was ever rented)
+REQUIRED_SERIES = {
+    "des": ("short_waits", "lr"),
+    "fluid": ("short_delay", "lr"),
+    "serving": ("short_waits", "active_transients", "batch_occupancy"),
+}
+
+
+def validate_run_result(rr: "RunResult") -> list:
+    """Schema gate for persisted RunResults — the list of violations (empty
+    when valid). The CI smoke driver (``repro.launch.smoke``) fails on any
+    violation, not just on crashes: canonical metric names present and
+    finite, the engine's required series present and non-empty, seed /
+    engine provenance set, resolved config recorded."""
+    problems = []
+    if not rr.engine:
+        problems.append("empty engine tag")
+    if not rr.scenario:
+        problems.append("empty scenario name")
+    if rr.schema_version != SCHEMA_VERSION:
+        problems.append(f"schema_version {rr.schema_version} != "
+                        f"{SCHEMA_VERSION}")
+    missing = [m for m in CANONICAL_METRICS if m not in rr.metrics]
+    if missing:
+        problems.append(f"missing canonical metrics: {missing}")
+    bad = [m for m in CANONICAL_METRICS if m in rr.metrics
+           and not np.isfinite(rr.metrics[m])]
+    if bad:
+        problems.append(f"non-finite canonical metrics: {bad}")
+    for name in REQUIRED_SERIES.get(rr.engine, ()):
+        arr = rr.series.get(name)
+        if arr is None:
+            problems.append(f"missing series {name!r}")
+        elif np.asarray(arr).size == 0:
+            problems.append(f"empty series {name!r}")
+    if rr.seed is None:
+        problems.append("seed (trace provenance) not set")
+    if rr.engine in ("des", "serving") and rr.sim_seed is None:
+        problems.append("sim_seed (engine provenance) not set")
+    if not rr.config:
+        problems.append("resolved config missing")
+    return problems
+
 
 def _jsonable(obj):
     """Recursively coerce numpy/JAX scalars so json.dumps is deterministic
@@ -317,6 +362,8 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
         "short_waits": waits,
         "active_transients": np.asarray(fleet.transient_counts, float),
         "transient_lifetimes": np.asarray(fleet.lifetimes, float) * tick_s,
+        # per-tick decoded-slots / paid-slot-capacity (continuous batching)
+        "batch_occupancy": np.asarray(fleet.batch_occupancy, float),
     }
     wl_meta = dict(workload_meta or {})
     pinned = wl_meta.pop("pinned_per_tick", None)
@@ -339,6 +386,9 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
         "n_transients_used": float(summary["n_transients_used"]),
         "avg_transient_lifetime_s": float(summary["avg_lifetime_ticks"])
         * tick_s,
+        "avg_slot_occupancy": float(summary["avg_slot_occupancy"]),
+        "transient_slot_occupancy": float(
+            summary["transient_slot_occupancy"]),
     }
     cfg = asdict(config) if is_dataclass(config) else dict(config or {})
     meta = {"workload": _jsonable(wl_meta)}

@@ -94,6 +94,9 @@ OVERRIDE_SPEC: Dict[str, Override] = {
                                        "servers"),
     "revocation_mttf_h": Override(sim_key="revocation_mttf", scale=_HOURS,
                                   help="spot revocation MTTF (hours)"),
+    "max_slots": Override(sim_key="max_slots", type=int,
+                          help="decode slots per serving replica "
+                               "(continuous batching; serving engine)"),
 }
 
 

@@ -23,13 +23,88 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import TYPE_CHECKING, Deque, Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models.decoder import DecoderLM
+if TYPE_CHECKING:  # jax + model imports stay lazy: SlotState is also the
+    from repro.models.decoder import DecoderLM  # serving fleet's (numpy-only)
+    # slot substrate, and the DES-only multiprocess workers import it
+
+
+class SlotState:
+    """Fixed-capacity decode-slot bookkeeping — the continuous-batching
+    substrate shared by :class:`ContinuousBatcher` (real-model decode) and
+    the serving fleet's replicas (``repro.runtime.serving``).
+
+    Admit-on-free-slot semantics: a finished occupant frees its slot
+    immediately and the lowest free slot takes the next admission — no
+    batch-drain barrier. Occupants are opaque to this class (the batcher
+    stores ``GenRequest``; the fleet stores its per-slot decode record).
+    """
+
+    __slots__ = ("max_slots", "_occupants")
+
+    def __init__(self, max_slots: int):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        self.max_slots = int(max_slots)
+        self._occupants: List[Optional[object]] = [None] * self.max_slots
+
+    @property
+    def n_active(self) -> int:
+        return sum(o is not None for o in self._occupants)
+
+    @property
+    def n_free(self) -> int:
+        return self.max_slots - self.n_active
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_active / self.max_slots
+
+    def get(self, slot: int):
+        return self._occupants[slot]
+
+    def free_slot(self) -> Optional[int]:
+        """Lowest free slot index, or None when full."""
+        for i, o in enumerate(self._occupants):
+            if o is None:
+                return i
+        return None
+
+    def place(self, slot: int, item) -> None:
+        """Admit ``item`` into a specific (free) slot."""
+        if self._occupants[slot] is not None:
+            raise RuntimeError(f"slot {slot} is occupied")
+        self._occupants[slot] = item
+
+    def admit(self, item) -> int:
+        """Admit ``item`` into the lowest free slot; returns the slot."""
+        slot = self.free_slot()
+        if slot is None:
+            raise RuntimeError("no free slot")
+        self._occupants[slot] = item
+        return slot
+
+    def release(self, slot: int):
+        """Free a slot; returns the occupant that held it."""
+        item = self._occupants[slot]
+        if item is None:
+            raise RuntimeError(f"slot {slot} is already free")
+        self._occupants[slot] = None
+        return item
+
+    def clear(self) -> None:
+        self._occupants = [None] * self.max_slots
+
+    def items(self) -> List[Tuple[int, object]]:
+        """Snapshot of ``(slot, occupant)`` pairs — safe to admit/release
+        while iterating (revocation and finish paths mutate mid-scan)."""
+        return [(i, o) for i, o in enumerate(self._occupants) if o is not None]
+
+    def occupants(self) -> List[object]:
+        return [o for o in self._occupants if o is not None]
 
 
 @dataclass
@@ -49,8 +124,11 @@ class GenRequest:
 
 
 class ContinuousBatcher:
-    def __init__(self, model: DecoderLM, params, *, max_slots: int = 4,
+    def __init__(self, model: "DecoderLM", params, *, max_slots: int = 4,
                  max_len: int = 128, prompt_bucket: int = 16):
+        import jax
+        import jax.numpy as jnp
+
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -66,7 +144,7 @@ class ContinuousBatcher:
             lambda l: jnp.stack([l] * max_slots), one_slot)
         self.pos = np.zeros(max_slots, np.int64)  # next absolute position
         self.remaining = np.zeros(max_slots, np.int64)
-        self.active: List[Optional[GenRequest]] = [None] * max_slots
+        self.slots = SlotState(max_slots)  # occupants: GenRequest
         self.last_tok = jnp.zeros((max_slots, 1), jnp.int32)
         self.queue: Deque[GenRequest] = deque()
         self.step_count = 0
@@ -88,6 +166,8 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def _prefill_fn(self, plen: int):
+        import jax
+
         if plen not in self._prefills:
             def prefill(params, toks):
                 return self.model.prefill(params, tokens=toks,
@@ -97,6 +177,9 @@ class ContinuousBatcher:
         return self._prefills[plen]
 
     def _admit(self, slot: int, req: GenRequest):
+        import jax
+        import jax.numpy as jnp
+
         # one compiled prefill per distinct prompt length (a deployment would
         # right-pad to buckets and resume decode at the true length — the
         # rolling-cache invariant masks the padded tail automatically; exact
@@ -114,41 +197,45 @@ class ContinuousBatcher:
         self.last_tok = self.last_tok.at[slot, 0].set(tok)
         self.pos[slot] = plen
         self.remaining[slot] = req.max_new - 1
-        self.active[slot] = req
+        self.slots.place(slot, req)
 
     # ------------------------------------------------------------------ step
 
     def step(self) -> int:
         """Admit queued requests into free slots, then decode one token for
         every active slot. Returns number of active slots."""
-        for slot in range(self.max_slots):
-            if self.active[slot] is None and self.queue:
-                self._admit(slot, self.queue.popleft())
-        n_active = sum(a is not None for a in self.active)
+        import jax.numpy as jnp
+
+        while self.queue and self.slots.n_free:
+            self._admit(self.slots.free_slot(), self.queue.popleft())
+        n_active = self.slots.n_active
         if n_active == 0:
             self.step_count += 1
             return 0
         logits, self.cache_slots = self._decode(
             self.cache_slots, self.last_tok, jnp.asarray(self.pos, jnp.int32))
         toks = np.asarray(jnp.argmax(logits, axis=-1))
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
+        for slot, req in self.slots.items():
             req.tokens.append(int(toks[slot]))
             self.pos[slot] += 1
             self.remaining[slot] -= 1
             if self.remaining[slot] <= 0 or self.pos[slot] >= self.max_len - 1:
                 req.finish_step = self.step_count
-                self.active[slot] = None  # slot freed for next step
+                self.slots.release(slot)  # freed for next step
         self.last_tok = jnp.asarray(toks[:, None], jnp.int32)
         self.step_count += 1
         return n_active
 
     def run(self, until_empty: bool = True, max_steps: int = 10_000):
-        while max_steps > 0 and (self.queue or any(self.active)):
+        """Step the engine. With ``until_empty`` (the default) stepping
+        stops once the queue and every slot have drained (or ``max_steps``
+        is exhausted); ``until_empty=False`` steps exactly ``max_steps``
+        times — fixed-horizon driving, idle steps included."""
+        while max_steps > 0 and (not until_empty
+                                 or self.queue or self.slots.n_active):
             self.step()
             max_steps -= 1
 
     @property
     def occupancy(self) -> float:
-        return sum(a is not None for a in self.active) / self.max_slots
+        return self.slots.occupancy

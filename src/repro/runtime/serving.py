@@ -15,10 +15,19 @@ short pool (the probe-failure fallback) — so ``EagleProbing``,
 ``BurstGuardProbing`` per-class admission and ``SpotAwareProbing``
 revocation pricing all drive request placement unchanged.
 
-The fleet advances in ticks (1 tick = 1 decode step = one token for every
-active replica). ``decode_fn`` can be a real jitted model decode step — the
-examples run a reduced model for true end-to-end serving; tests omit it for
-speed (identical scheduling semantics either way).
+The fleet advances in ticks (1 tick = 1 decode step). Replicas are
+*multi-slot*: every replica owns ``max_slots`` decode slots with
+``ContinuousBatcher``-style admit-on-free-slot semantics (the shared
+``repro.runtime.batching.SlotState`` bookkeeping), so one tick decodes one
+token for every occupied slot — a replica serves up to ``max_slots``
+requests concurrently, and a freed slot admits the next queued request on
+the following tick. ``max_slots=1`` reproduces the pre-batching fleet
+bit-for-bit. ``decode_fn`` can be a real jitted model decode step (one
+slot-batched step per replica-tick) — the examples run a reduced model for
+true end-to-end serving; tests omit it for speed (identical scheduling
+semantics either way). Slot occupancy is reported per tick
+(``batch_occupancy``) and as paid-capacity-weighted averages
+(``avg_slot_occupancy``, ``transient_slot_occupancy``).
 
 Hedging (paper §3.3 transient-safety rule): a request whose time on a
 transient replica exceeds ``hedge_factor x gen_len`` ticks is *duplicated*
@@ -42,6 +51,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.runtime.batching import SlotState
 from repro.sched.controller import ControllerSpec, FleetView, select_drain
 from repro.sched.policy import EagleProbing, ShortPlacementPolicy
 
@@ -60,6 +70,7 @@ class ServingFleetConfig:
 
     n_replicas: int = 80
     n_reserve: int = 0
+    max_slots: int = 1  # decode slots per replica (continuous batching)
     max_transient: int = 0  # K = r * N_s * p
     threshold: float = 0.75  # L_r^T over the pod fleet
     provisioning_delay: float = 60.0  # seconds
@@ -98,24 +109,47 @@ class Request:
 
 
 @dataclass
+class _SlotDecode:
+    """One slot-resident decode: the request plus its remaining tokens."""
+
+    req: Request
+    tokens_left: int
+
+
+@dataclass
 class _Replica:
     rid: int
     kind: str  # ondemand | transient
+    max_slots: int = 1  # concurrent decode slots (continuous batching)
     queue: deque = field(default_factory=deque)
-    active: Optional[Request] = None
-    tokens_left: int = 0
     pinned: bool = False  # long job occupies this replica
     draining: bool = False
     online_at: int = 0
     offline_at: Optional[int] = None
-    #: cached queued + active decode ticks — the policy view's pending_work
-    #: must be O(1), not O(queue), per probe (invariant kept by enqueue /
-    #: the fleet's advance/displace/revoke paths)
+    #: cached queued + slot-resident decode ticks — the policy view's
+    #: pending_work must be O(1), not O(queue), per probe (invariant kept by
+    #: enqueue / the fleet's advance/displace/revoke paths)
     pending_ticks: int = 0
+    slots: SlotState = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self.slots = SlotState(self.max_slots)
 
     @property
     def load(self) -> int:
-        return len(self.queue) + (1 if self.active else 0)
+        return len(self.queue) + self.slots.n_active
+
+    @property
+    def active(self) -> Optional[Request]:
+        """First slot-resident request (the single-slot view the
+        pre-batching fleet exposed; kept for tests/introspection)."""
+        occ = self.slots.occupants()
+        return occ[0].req if occ else None
+
+    @property
+    def tokens_left(self) -> int:
+        """Remaining decode ticks across every occupied slot."""
+        return sum(d.tokens_left for d in self.slots.occupants())
 
     def enqueue(self, req: Request, t: Optional[int] = None) -> None:
         if t is not None:
@@ -128,7 +162,11 @@ class _Replica:
 
 class _ReplicaView:
     """Duck-typed ``Server`` stand-in so ``repro.sched.policy`` objects read
-    replica state directly (pending decode ticks, pinning, queue classes)."""
+    replica state directly (pending decode ticks, pinning, slot headroom,
+    queue classes). Slot-aware extensions over the DES ``Server`` protocol:
+    ``n_slots`` / ``free_slots`` (continuous-batching headroom) and
+    ``running_tasks`` (every slot-resident request, not a one-task proxy) —
+    see ``repro.sched.policy.running_entries``."""
 
     __slots__ = ("_r",)
 
@@ -143,9 +181,13 @@ class _ReplicaView:
 
     @property
     def pending_work(self) -> float:
+        # effective drain ticks: a replica decoding max_slots concurrent
+        # requests clears its backlog up to max_slots times faster, so the
+        # probes compare real headroom, not a replica-count proxy
+        # (max_slots=1 reduces to the raw tick count bit-for-bit)
         r = self._r
-        return float(r.pending_ticks) + (self._PIN_PENALTY if r.pinned
-                                         else 0.0)
+        return r.pending_ticks / r.max_slots + (self._PIN_PENALTY if r.pinned
+                                                else 0.0)
 
     @property
     def long_occupied(self) -> bool:
@@ -156,10 +198,25 @@ class _ReplicaView:
         return "transient" if self._r.kind == "transient" else "general"
 
     @property
+    def n_slots(self) -> int:
+        return self._r.max_slots
+
+    @property
+    def free_slots(self) -> int:
+        return self._r.slots.n_free
+
+    @property
     def running(self):
         a = self._r.active
         return None if a is None else (float(a.gen_len), float(a.arrival),
                                        False, a.job_id)
+
+    @property
+    def running_tasks(self):
+        """Task tuples for every slot-resident request (BurstGuard's
+        per-class backlog share must count all of them)."""
+        return tuple((float(d.req.gen_len), float(d.req.arrival), False,
+                      d.req.job_id) for d in self._r.slots.occupants())
 
     @property
     def queue(self):
@@ -203,7 +260,7 @@ class _ClusterView:
 class ElasticServingFleet:
     def __init__(self, n_ondemand: int, *, threshold: float = 0.75,
                  max_transient: int = 0, provisioning_delay: int = 60,
-                 hedge_factor: float = 4.0,
+                 hedge_factor: float = 4.0, max_slots: int = 1,
                  decode_fn: Optional[Callable] = None,
                  revocation_mttf_ticks: float = 0.0, seed: int = 0,
                  spec: Optional[ControllerSpec] = None,
@@ -213,11 +270,13 @@ class ElasticServingFleet:
                                            provisioning_delay)
         self.provisioning_delay = int(self.spec.provisioning_delay)
         self.hedge_factor = hedge_factor
+        self.max_slots = int(max_slots)
         self.decode_fn = decode_fn
         self.rng = np.random.default_rng(seed)
         self.revocation_mttf = revocation_mttf_ticks
         self.replicas: List[_Replica] = [
-            _Replica(i, "ondemand") for i in range(n_ondemand)]
+            _Replica(i, "ondemand", self.max_slots)
+            for i in range(n_ondemand)]
         self.pending_online: List[int] = []  # ticks at which transients arrive
         self.lifetimes: List[int] = []
         self.n_revocations = 0
@@ -228,6 +287,12 @@ class ElasticServingFleet:
         self._ticks = 0
         self.peak_active = 0
         self.transient_counts: List[int] = []  # per-tick online transients
+        #: per-tick decoded-slots / paid-slot-capacity (continuous batching)
+        self.batch_occupancy: List[float] = []
+        self._busy_slot_area = 0  # slot-ticks that decoded a token
+        self._paid_slot_area = 0  # slot-ticks of online unpinned capacity
+        self._tr_busy_slot_area = 0  # same, transients only
+        self._tr_paid_slot_area = 0
         self._by_rid: Dict[int, _Replica] = {r.rid: r for r in self.replicas}
         # routing rng is independent of the revocation stream so the same
         # seed yields the same placement regardless of MTTF settings
@@ -249,7 +314,8 @@ class ElasticServingFleet:
                               drain_preference)
         mttf = cfg.revocation_mttf / cfg.tick_s if cfg.revocation_mttf else 0.0
         return cls(cfg.n_replicas + cfg.n_reserve,
-                   hedge_factor=cfg.hedge_factor, decode_fn=decode_fn,
+                   hedge_factor=cfg.hedge_factor, max_slots=cfg.max_slots,
+                   decode_fn=decode_fn,
                    revocation_mttf_ticks=mttf, seed=seed, spec=spec,
                    short_policy=short_policy, probe_d=cfg.probe_d,
                    probe_retries=cfg.probe_retries)
@@ -281,7 +347,8 @@ class ElasticServingFleet:
         self._by_rid[sid].enqueue(req, t)
 
     def _bring_online(self, t: int) -> _Replica:
-        nr = _Replica(self._next_rid, "transient", online_at=t)
+        nr = _Replica(self._next_rid, "transient", self.max_slots,
+                      online_at=t)
         self._next_rid += 1
         self.replicas.append(nr)
         self._by_rid[nr.rid] = nr
@@ -293,8 +360,8 @@ class ElasticServingFleet:
 
         ``want`` is clamped to the on-demand count — transients are never
         pinned. A replica transitioning to pinned hands its queue back to
-        the router and requeues its active request (progress restarts
-        elsewhere): the long job takes the replica whole."""
+        the router and requeues its slot-resident requests (progress
+        restarts elsewhere): the long job takes the replica whole."""
         ond = [r for r in self.replicas
                if r.kind == "ondemand" and r.offline_at is None]
         want = min(want, len(ond))
@@ -304,14 +371,15 @@ class ElasticServingFleet:
                 newly.append(r)
             r.pinned = i < want
         for r in newly:
-            displaced = list(r.queue)
-            r.queue.clear()
-            if r.active is not None:
-                req = r.active
-                r.active = None
+            residents: List[Request] = []
+            for slot, d in r.slots.items():
+                r.slots.release(slot)
+                req = d.req
                 if req.primary is None and not req.hedged:
                     req.start = None  # no live copy elsewhere: full restart
-                displaced.insert(0, req)
+                residents.append(req)
+            displaced = residents + list(r.queue)
+            r.queue.clear()
             r.pending_ticks = 0
             for req in displaced:
                 if not self._finished(req):
@@ -341,38 +409,46 @@ class ElasticServingFleet:
                               online_key=lambda r: r.online_at)
             tr.draining = True
 
-    def _advance_replica(self, r: _Replica, t: int):
+    def _advance_replica(self, r: _Replica, t: int) -> int:
+        """One decode tick for one replica: free slots whose hedged pair
+        already won, admit queued requests into free slots, decode one token
+        for every occupied slot. Returns the number of slots that decoded
+        (the occupancy accounting's busy-slot count)."""
         if r.pinned:
-            return
-        if r.active is not None and self._finished(r.active):
-            # the other copy of a hedged pair already won: cancel this one
-            self.n_hedge_cancelled += 1
-            r.pending_ticks -= r.tokens_left
-            r.active = None
-        while r.active is None and r.queue:
+            return 0
+        for slot, d in r.slots.items():
+            if self._finished(d.req):
+                # the other copy of a hedged pair already won: cancel this one
+                self.n_hedge_cancelled += 1
+                r.pending_ticks -= d.tokens_left
+                r.slots.release(slot)
+        while r.queue and r.slots.n_free:
             req = r.queue.popleft()
             if self._finished(req):  # cancelled duplicate, never started
                 self.n_hedge_cancelled += 1
                 r.pending_ticks -= req.gen_len
                 continue
-            r.active = req
             prim = self._primary_of(req)
             if prim.start is None:
                 prim.start = t
-            r.tokens_left = req.gen_len  # pending_ticks already counts it
-        if r.active is not None:
+            # pending_ticks already counts the admitted request
+            r.slots.admit(_SlotDecode(req, req.gen_len))
+        decoding = r.slots.items()
+        if decoding:
             if self.decode_fn is not None:
-                self.decode_fn(r.rid)
-            r.tokens_left -= 1
-            r.pending_ticks -= 1
-            if r.tokens_left <= 0:
-                prim = self._primary_of(r.active)
-                if prim.finish is None:  # first completion wins
-                    prim.finish = t + 1
-                r.active = None
-        if r.draining and r.active is None and not r.queue:
+                self.decode_fn(r.rid)  # one slot-batched step per replica
+            for slot, d in decoding:
+                d.tokens_left -= 1
+                r.pending_ticks -= 1
+                if d.tokens_left <= 0:
+                    prim = self._primary_of(d.req)
+                    if prim.finish is None:  # first completion wins
+                        prim.finish = t + 1
+                    r.slots.release(slot)
+        if r.draining and not r.slots.n_active and not r.queue:
             r.offline_at = t
             self.lifetimes.append(t - r.online_at)
+        return len(decoding)
 
     def _maybe_hedge(self, t: int):
         reserve = [r for r in self._stable()
@@ -380,9 +456,7 @@ class ElasticServingFleet:
         if not reserve:
             return
         for r in self._transients():
-            cands = list(r.queue)
-            if r.active is not None:
-                cands.append(r.active)
+            cands = list(r.queue) + [d.req for _, d in r.slots.items()]
             for req in cands:
                 if (req.hedged or req.primary is not None
                         or self._finished(req)):
@@ -407,9 +481,9 @@ class ElasticServingFleet:
                 self.n_revocations += 1
                 r.offline_at = t
                 self.lifetimes.append(t - r.online_at)
-                requeue = list(r.queue) + ([r.active] if r.active else [])
+                requeue = list(r.queue) + [d.req for _, d in r.slots.items()]
                 r.queue.clear()
-                r.active = None
+                r.slots.clear()
                 r.pending_ticks = 0
                 for req in requeue:
                     if self._finished(req):
@@ -435,9 +509,26 @@ class ElasticServingFleet:
         self._controller_tick(t)
         self._maybe_revoke(t)
         self._maybe_hedge(t)
+        # paid slot capacity is counted in the same pass that advances each
+        # replica: a draining replica that goes offline *inside* its advance
+        # still served (and was paid for) this tick; pinned replicas cannot
+        # decode, so their slots are long-job capacity, not serving capacity
+        busy = cap = tr_busy = tr_cap = 0
         for r in self.replicas:
-            if r.offline_at is None:
-                self._advance_replica(r, t)
+            if r.offline_at is not None:
+                continue
+            decoded = self._advance_replica(r, t)
+            busy += decoded
+            if not r.pinned:
+                cap += r.max_slots
+            if r.kind == "transient":
+                tr_busy += decoded
+                tr_cap += r.max_slots
+        self.batch_occupancy.append(busy / cap if cap else 0.0)
+        self._busy_slot_area += busy
+        self._paid_slot_area += cap
+        self._tr_busy_slot_area += tr_busy
+        self._tr_paid_slot_area += tr_cap
         online = len(self._online_transients())
         self._active_area += online
         self.peak_active = max(self.peak_active, online)
@@ -472,6 +563,13 @@ class ElasticServingFleet:
             "n_revocations": self.n_revocations,
             "n_hedges": self.n_hedges,
             "n_hedge_cancelled": self.n_hedge_cancelled,
+            # paid-capacity-weighted slot occupancy (continuous batching):
+            # decoded slot-ticks over online unpinned slot-ticks — what the
+            # rented capacity actually did, fleet-wide and transients-only
+            "avg_slot_occupancy": self._busy_slot_area
+            / max(self._paid_slot_area, 1),
+            "transient_slot_occupancy": self._tr_busy_slot_area
+            / max(self._tr_paid_slot_area, 1),
         }
 
 

@@ -19,7 +19,7 @@ from repro.sched.policy import (BurstGuardProbing, EagleProbing,  # noqa: F401
                                 FluidPolicyParams, LeastLoadedCentral,
                                 PlacementPolicy, ShortPlacementPolicy,
                                 SpotAwareProbing, make_long_policy,
-                                make_short_policy)
+                                make_short_policy, running_entries)
 from repro.sched.scenarios import (PAPER_SCALE, QUICK_SCALE, Scenario,  # noqa: F401
                                    get_scenario, register_scenario,
                                    scenario_names)

@@ -21,6 +21,15 @@ Policies see the cluster through the duck-typed view the engine passes to
 ``short_pool()``, ``rng`` and ``cfg``. The same objects therefore drive unit
 tests with hand-built clusters.
 
+Slot-aware views (the serving fleet's continuous-batching replicas) extend
+the per-server protocol: ``pending_work`` is *effective* drain time (queued
+decode ticks divided by the replica's slot count, so probes compare real
+headroom rather than a replica-count proxy), ``n_slots`` / ``free_slots``
+report batching headroom, and ``running_tasks`` lists every slot-resident
+task where single-task servers expose only ``running`` — policies that scan
+running work must go through :func:`running_entries` so both server shapes
+count correctly.
+
 Each short policy also exposes :meth:`ShortPlacementPolicy.fluid_params`
 — its aggregate (fluid-model) signature consumed by
 ``repro.core.simjax.simulate_fluid`` — so every policy runs in both the DES
@@ -58,6 +67,22 @@ class FluidPolicyParams:
     def is_identity(self) -> bool:
         return (self.backlog_partition_share >= 1.0
                 and self.transient_availability >= 1.0)
+
+
+def running_entries(server) -> tuple:
+    """Every running task tuple on a server, slot-aware.
+
+    Multi-slot serving replicas run several concurrent decodes and expose
+    them as ``running_tasks``; single-task servers (the DES ``Server``)
+    expose only ``running``. Per-class accounting (BurstGuard's backlog
+    share) must count all slot residents, not a one-task proxy — a
+    single-slot view's ``running_tasks`` degenerates to exactly the one
+    entry ``running`` reports."""
+    tasks = getattr(server, "running_tasks", None)
+    if tasks is not None:
+        return tuple(tasks)
+    r = server.running
+    return () if r is None else (r,)
 
 
 class PlacementPolicy:
@@ -222,9 +247,9 @@ class BurstGuardProbing(EagleProbing):
         total = mine = 0
         for sid in spool:
             s = servers[sid]
-            if s.running is not None:
+            for entry in running_entries(s):  # every slot resident counts
                 total += 1
-                mine += s.running[3] % self.n_classes == cls
+                mine += entry[3] % self.n_classes == cls
             for i, entry in enumerate(s.queue):
                 if i >= per_server:
                     break

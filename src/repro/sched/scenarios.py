@@ -23,7 +23,7 @@ Registering a new scenario::
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field, fields, replace
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import SimConfig
@@ -80,6 +80,12 @@ class Scenario:
         kw = dict(n_servers=sc["n_servers"], n_short_reserved=sc["n_short"],
                   seed=seed, **self.sim_kwargs)
         kw.update(sim_overrides or {})
+        bad = set(kw) - {f.name for f in fields(SimConfig)}
+        if bad:  # a clear error beats SimConfig's opaque TypeError
+            raise ValueError(
+                f"override(s) {sorted(bad)} are not SimConfig fields; "
+                f"serving-only knobs (max_slots, n_reserve, pin_scale, ...) "
+                f"apply only to engine='serving'")
         return SimConfig(**kw)
 
     def policies(self) -> Tuple[PlacementPolicy, ShortPlacementPolicy]:
@@ -288,6 +294,21 @@ register_scenario(Scenario(
     short_policy="burst_guard", policy_kwargs=dict(guard_frac=0.5),
     sim_kwargs=dict(_SERVE),
     serving_kwargs=dict(pin_scale=2.2)))
+register_scenario(Scenario(
+    name="serve_batched_yahoo",
+    description="serve_yahoo with slot-level continuous batching: every "
+                "replica decodes up to 4 concurrent requests "
+                "(max_slots=4, admit-on-free-slot)",
+    sim_kwargs=dict(_SERVE),
+    serving_kwargs=dict(pin_scale=1.3, max_slots=4)))
+register_scenario(Scenario(
+    name="serve_batched_flash_crowd",
+    description="flash-crowd serving with BurstGuard per-class admission "
+                "over 4-slot continuous-batching replicas",
+    trace_fn="flash_crowd_like",
+    short_policy="burst_guard", policy_kwargs=dict(guard_frac=0.5),
+    sim_kwargs=dict(_SERVE),
+    serving_kwargs=dict(pin_scale=2.2, max_slots=4)))
 register_scenario(Scenario(
     name="serve_spot",
     description="serving fleet on spot transients (1 h MTTF): "

@@ -68,6 +68,30 @@ def test_slot_reuse_no_cross_contamination():
     assert rb2.start_step > ra.start_step  # queued behind a
 
 
+def test_run_honors_until_empty():
+    """``run(until_empty=False)`` steps exactly ``max_steps`` times (idle
+    steps included) instead of silently draining to empty — the parameter
+    used to be accepted and ignored."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(3)
+    eng = ContinuousBatcher(model, params, max_slots=2, max_len=64)
+    req = GenRequest(0, rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                     max_new=6)
+    eng.submit(req)
+    eng.run(until_empty=False, max_steps=3)
+    assert eng.step_count == 3 and req.finish_step is None  # mid-flight
+    eng.run(until_empty=False, max_steps=5)
+    assert eng.step_count == 8  # idle steps still advance the clock
+    assert req.finish_step is not None and len(req.tokens) == 6
+    # default drains to empty and stops (no idle spinning)
+    eng2 = ContinuousBatcher(model, params, max_slots=2, max_len=64)
+    eng2.submit(GenRequest(1, rng.integers(1, cfg.vocab_size, 8)
+                           .astype(np.int32), max_new=4))
+    eng2.run()
+    assert eng2.slots.n_active == 0 and not eng2.queue
+    assert eng2.step_count == 3  # prefill emits token 1; 3 decode steps
+
+
 def test_occupancy_and_waits_reported():
     cfg, model, params = _setup()
     rng = np.random.default_rng(2)

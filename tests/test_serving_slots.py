@@ -1,0 +1,293 @@
+"""Slot-level continuous batching on the elastic serving fleet: SlotState
+bookkeeping, max_slots=1 byte-identity with the pre-batching fleet,
+admit-on-free-slot semantics, hedge/drain over slot-resident requests,
+occupancy-weighted paid-capacity accounting, and the slot-aware policy
+view (pending_work normalization, running_entries, max_slots sweep axis)."""
+
+import numpy as np
+import pytest
+
+from repro.exp import run, sweep
+from repro.runtime import ElasticServingFleet, Request
+from repro.runtime.batching import SlotState
+from repro.sched.policy import running_entries
+
+# -------------------------------------------------------------- SlotState
+
+def test_slot_state_admit_on_lowest_free_slot():
+    s = SlotState(3)
+    assert s.admit("a") == 0 and s.admit("b") == 1
+    assert (s.n_active, s.n_free) == (2, 1)
+    assert s.release(0) == "a"
+    assert s.admit("c") == 0  # freed slot is reused first
+    assert s.admit("d") == 2
+    with pytest.raises(RuntimeError, match="no free slot"):
+        s.admit("e")
+    assert s.items() == [(0, "c"), (1, "b"), (2, "d")]
+    assert s.occupancy == 1.0
+    s.clear()
+    assert s.n_active == 0 and s.free_slot() == 0
+
+
+def test_slot_state_place_and_release_guards():
+    s = SlotState(2)
+    s.place(1, "x")
+    with pytest.raises(RuntimeError, match="occupied"):
+        s.place(1, "y")
+    with pytest.raises(RuntimeError, match="already free"):
+        s.release(0)
+    assert s.free_slot() == 0
+    with pytest.raises(ValueError):
+        SlotState(0)
+
+
+# --------------------------------------------- max_slots=1 byte-identity
+
+#: pre-batching fleet metrics for the three serve_* presets at quick scale
+#: (seed=42, sim_seed=42), captured at the PR-4 tree — the default
+#: max_slots=1 fleet must reproduce them exactly (same floats), hedging,
+#: revocation and drain paths included
+_PRE_BATCHING_METRICS = {
+    "serve_yahoo": {
+        "avg_active_transients": 3.387522361359571,
+        "avg_transient_lifetime_s": 1594.6315789473683,
+        "n_done": 1093.0,
+        "n_hedge_cancelled": 6.0,
+        "n_hedges": 6.0,
+        "n_requests": 1093.0,
+        "n_revocations": 0.0,
+        "n_transients_used": 38.0,
+        "n_unfinished": 0.0,
+        "peak_active_transients": 8.0,
+        "short_avg_wait_s": 440.78133577310155,
+        "short_max_wait_s": 9679.0,
+        "short_p50_wait_s": 239.0,
+        "short_p90_wait_s": 942.2000000000003,
+        "short_p99_wait_s": 4994.3599999999915,
+    },
+    "serve_flash_crowd": {
+        "avg_active_transients": 3.6296903254972874,
+        "avg_transient_lifetime_s": 4014.4375,
+        "n_done": 1044.0,
+        "n_hedge_cancelled": 3.0,
+        "n_hedges": 4.0,
+        "n_requests": 1044.0,
+        "n_revocations": 0.0,
+        "n_transients_used": 16.0,
+        "n_unfinished": 0.0,
+        "peak_active_transients": 8.0,
+        "short_avg_wait_s": 833.0392720306513,
+        "short_max_wait_s": 1757.0,
+        "short_p50_wait_s": 861.5,
+        "short_p90_wait_s": 1548.0,
+        "short_p99_wait_s": 1688.9899999999996,
+    },
+    "serve_spot": {
+        "avg_active_transients": 3.4170393559928445,
+        "avg_transient_lifetime_s": 1091.5,
+        "n_done": 1093.0,
+        "n_hedge_cancelled": 30.0,
+        "n_hedges": 30.0,
+        "n_requests": 1093.0,
+        "n_revocations": 22.0,
+        "n_transients_used": 56.0,
+        "n_unfinished": 0.0,
+        "peak_active_transients": 8.0,
+        "short_avg_wait_s": 527.8938700823422,
+        "short_max_wait_s": 9679.0,
+        "short_p50_wait_s": 266.0,
+        "short_p90_wait_s": 1175.0,
+        "short_p99_wait_s": 4994.3599999999915,
+    },
+}
+
+
+@pytest.mark.parametrize("preset", sorted(_PRE_BATCHING_METRICS))
+def test_max_slots_1_reproduces_pre_batching_fleet(preset):
+    rr = run(preset, "serving", quick=True, seed=42, sim_seed=42)
+    assert rr.config["max_slots"] == 1
+    for k, v in _PRE_BATCHING_METRICS[preset].items():
+        assert rr.metrics[k] == v, (preset, k)
+    # the new occupancy surface rides alongside without disturbing the old
+    assert 0.0 < rr.metrics["avg_slot_occupancy"] <= 1.0
+    assert rr.series["batch_occupancy"].size > 0
+
+
+# --------------------------------------------- admit-on-free-slot semantics
+
+def test_freed_slot_admits_queued_request_next_tick():
+    fleet = ElasticServingFleet(1, max_transient=0, max_slots=2)
+    reqs = [Request(0, 0, gen_len=1), Request(1, 0, gen_len=3),
+            Request(2, 0, gen_len=2)]
+    fleet._tick(0, reqs, pinned=0)
+    r = fleet.replicas[0]
+    # both slots taken at t=0, the third request queued behind them
+    assert reqs[0].start == 0 and reqs[1].start == 0
+    assert reqs[2].start is None and reqs[0].finish == 1
+    fleet._tick(1, (), pinned=0)
+    # request 0 freed its slot inside tick 0 -> request 2 admitted at t=1
+    assert reqs[2].start == 1
+    for t in range(2, 6):
+        fleet._tick(t, (), pinned=0)
+    assert all(q.finish is not None for q in reqs)
+    assert reqs[1].finish == 3 and reqs[2].finish == 3
+    assert r.slots.n_active == 0 and not r.queue and r.pending_ticks == 0
+
+
+def test_tick_decodes_every_occupied_slot():
+    """One tick = one token for every active slot: 4 gen_len-5 requests on
+    one 4-slot replica all finish at t=5 (serially they would take 20)."""
+    fleet = ElasticServingFleet(1, max_transient=0, max_slots=4)
+    reqs = [Request(i, 0, gen_len=5) for i in range(4)]
+    for t in range(6):
+        fleet._tick(t, reqs if t == 0 else (), pinned=0)
+    assert [q.finish for q in reqs] == [5, 5, 5, 5]
+
+
+# ------------------------------------------------ hedging over slot residents
+
+def test_hedge_cancels_copy_when_primary_in_transient_slot():
+    """§3.3 with batching: the hedged primary occupies a *slot* of a
+    multi-slot transient (not its queue head), keeps decoding there, wins,
+    and the duplicated on-demand copy is cancelled."""
+    fleet = ElasticServingFleet(1, threshold=0.0, max_transient=0,
+                                hedge_factor=0.5, max_slots=2)
+    tr = fleet._bring_online(0)
+    req = Request(0, 0, gen_len=10)
+    for t in range(30):
+        fleet._tick(t, [req] if t == 0 else (), pinned=1 if t < 3 else 0)
+        if t == 1:  # mid-flight: the primary is slot-resident on the transient
+            assert any(d.req is req for _, d in tr.slots.items())
+    assert req.hedged and fleet.n_hedges == 1
+    # the original never left its slot: started t=0, 10 tokens -> finish t=10
+    assert req.start == 0 and req.finish == 10
+    assert fleet.n_hedge_cancelled == 1
+    ond = fleet.replicas[0]
+    assert ond.slots.n_active == 0 and not ond.queue
+    assert fleet.summary([req])["n_done"] == 1
+
+
+# --------------------------------------------------- drain over slot residents
+
+def test_drain_completes_slot_resident_requests():
+    fleet = ElasticServingFleet(2, threshold=0.95, max_transient=4,
+                                provisioning_delay=1, max_slots=2)
+    reqs = [Request(i, 0, gen_len=4) for i in range(40)]
+    out = fleet.run(reqs, lambda t: 2 if t < 50 else 0, 500)
+    assert out["n_done"] == 40
+    for r in fleet.replicas:
+        if r.kind == "transient" and r.offline_at is not None:
+            assert not r.queue and r.slots.n_active == 0
+
+
+def test_revocation_requeues_all_slot_residents():
+    rng = np.random.default_rng(1)
+    fleet = ElasticServingFleet(4, threshold=0.5, max_transient=8,
+                                provisioning_delay=5, max_slots=3,
+                                revocation_mttf_ticks=100, seed=1)
+    reqs = [Request(i, int(rng.uniform(0, 800)), gen_len=6)
+            for i in range(300)]
+    out = fleet.run(reqs, lambda t: 3, 3000)
+    assert out["n_done"] == 300  # nothing lost despite multi-slot revocations
+    assert out["n_revocations"] > 0
+
+
+# -------------------------------------- occupancy-weighted paid capacity
+
+def test_occupancy_weighted_paid_capacity_accounting():
+    """Paid slot capacity = max_slots per online unpinned replica per tick;
+    busy = slots that decoded. A 4-slot transient decoding 2 requests while
+    the on-demand replica is pinned reads 0.5 per tick, and the summary
+    averages weight by paid capacity."""
+    fleet = ElasticServingFleet(1, max_transient=0, max_slots=4)
+    tr = fleet._bring_online(0)
+    tr.enqueue(Request(0, 0, gen_len=3))
+    tr.enqueue(Request(1, 0, gen_len=3))
+    for t in range(4):
+        fleet._tick(t, (), pinned=1)  # pin the on-demand: only tr serves
+    # ticks 0-2 decode 2 of 4 transient slots; tick 3 is idle but still paid
+    assert fleet.batch_occupancy == [0.5, 0.5, 0.5, 0.0]
+    s = fleet.summary([])
+    assert s["avg_slot_occupancy"] == pytest.approx(6 / 16)
+    assert s["transient_slot_occupancy"] == pytest.approx(6 / 16)
+
+
+def test_pinned_replica_is_not_paid_serving_capacity():
+    """An unpinned on-demand replica contributes its slots to paid serving
+    capacity; a pinned one does not (its slots belong to the long job)."""
+    fleet = ElasticServingFleet(2, max_transient=0, max_slots=2)
+    fleet._tick(0, [Request(0, 0, gen_len=2)], pinned=1)
+    # one unpinned on-demand replica with 2 slots, 1 decoding
+    assert fleet.batch_occupancy == [0.5]
+    fleet._tick(1, (), pinned=0)  # unpinned: 4 paid slots, 1 decoding
+    assert fleet.batch_occupancy[1] == 0.25
+
+
+# ------------------------------------------------- slot-aware policy view
+
+def test_view_pending_work_is_slot_normalized():
+    fleet = ElasticServingFleet(1, max_transient=0, max_slots=4)
+    r = fleet.replicas[0]
+    view = fleet._view.servers[r.rid]
+    r.enqueue(Request(0, 0, gen_len=6))
+    r.enqueue(Request(1, 0, gen_len=6))
+    # effective drain ticks: 12 queued ticks over 4 slots
+    assert view.pending_work == pytest.approx(3.0)
+    assert view.n_slots == 4 and view.free_slots == 4
+    fleet._tick(0, (), pinned=0)
+    assert view.free_slots == 2
+    assert len(view.running_tasks) == 2
+    assert view.running is not None  # single-slot compat: first resident
+
+
+def test_running_entries_duck_typing():
+    class _SingleTask:
+        running = (5.0, 0.0, False, 7)
+
+    class _Idle:
+        running = None
+
+    assert running_entries(_SingleTask()) == ((5.0, 0.0, False, 7),)
+    assert running_entries(_Idle()) == ()
+    fleet = ElasticServingFleet(1, max_transient=0, max_slots=3)
+    view = fleet._view.servers[0]
+    fleet._tick(0, [Request(0, 0, gen_len=4), Request(1, 0, gen_len=4)],
+                pinned=0)
+    assert len(running_entries(view)) == 2  # every slot resident counts
+    assert view.free_slots == 1
+
+
+# ------------------------------------------------------- experiment surface
+
+#: test-sized serving kwargs (mirrors tests/test_exp.py)
+_KW = dict(quick=True, seed=7, sim_seed=3,
+           trace_overrides=dict(n_servers=150, n_short=8,
+                                horizon=2 * 3600.0))
+
+
+def test_batched_presets_schema_and_occupancy():
+    for name in ("serve_batched_yahoo", "serve_batched_flash_crowd"):
+        rr = run(name, "serving", **_KW)
+        assert rr.config["max_slots"] == 4, name
+        assert 0.0 <= rr.metrics["avg_slot_occupancy"] <= 1.0
+        assert rr.series["batch_occupancy"].size > 0
+        assert float(rr.series["batch_occupancy"].max()) <= 1.0
+
+
+def test_serving_only_override_rejected_cleanly_on_des():
+    """A serving-only knob reaching the DES/fluid config path raises a
+    clear ValueError, not SimConfig's opaque TypeError."""
+    with pytest.raises(ValueError, match="engine='serving'"):
+        run("eagle", "des", quick=True, sim_overrides={"max_slots": 2})
+
+
+def test_max_slots_sweep_axis_and_monotone_delay():
+    sr = sweep("serve_flash_crowd", {"max_slots": [1, 4]}, engine="serving",
+               **_KW)
+    assert sr.shape == (2,) and sr.engine == "serving"
+    w1 = sr.at(max_slots=1)["short_avg_wait_s"]
+    w4 = sr.at(max_slots=4)["short_avg_wait_s"]
+    assert w4 <= w1  # batching can only shorten queueing delay
+    one = run("serve_flash_crowd", "serving",
+              sim_overrides={"max_slots": 4}, **_KW)
+    assert w4 == one.metrics["short_avg_wait_s"]
