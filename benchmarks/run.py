@@ -9,6 +9,9 @@ artifacts/bench/.
   serving — pod-level short-delay-vs-budget: static on-demand reserve vs
             the transient-backed elastic serving fleet
             (exp.run(engine="serving") on the serve_* presets)
+  serving_scale — serving-engine throughput: Python tick loop vs the
+            jitted JAX fleet (engine="serving_jax"), single runs and the
+            one-device-program sweep cube
   calibration — registry-wide fluid-vs-DES error tables + FluidPolicyParams
                 grid fit (repro.exp.compare); opt-in via --only (one DES +
                 ~17 fluid runs per scenario — minutes at full scale)
@@ -25,7 +28,8 @@ import pathlib
 import time
 
 from benchmarks import (calibration, fig1_burstiness, fig3_queueing_cdf,
-                        roofline, serving_delay, sweep_jax, table1_lifetimes)
+                        roofline, serving_delay, serving_scale, sweep_jax,
+                        table1_lifetimes)
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -60,6 +64,14 @@ def _derived(name: str, res: dict) -> str:
                 f"{lo['max_slots']:.0f}->{hi['max_slots']:.0f}: "
                 f"{lo['short_avg_wait_s']:.0f}s->{hi['short_avg_wait_s']:.0f}s "
                 f"occ={hi['avg_slot_occupancy']:.2f}")
+    if name == "serving_scale":
+        return (f"{res['scenario']}: py={res['python']['req_per_s']:.0f} "
+                f"jax={res['jax']['req_per_s']:.0f} req/s "
+                f"({res['speedup_steady']:.1f}x steady, compile "
+                f"{res['jax']['compile_overhead_s']:.1f}s) | cube "
+                f"{res['cube']['n_points']}pts "
+                f"{res['cube']['req_per_s']:.0f} req/s | "
+                f"agree={res['agreement']['avg_wait_rel_err']:.1%}")
     if name == "calibration":
         return (f"{len(res['scenarios'])} scenarios; mean |rel err| "
                 f"before={res['mean_abs_rel_err_before']:.1%} "
@@ -83,6 +95,7 @@ def main() -> None:
         "table1": table1_lifetimes.run,
         "sweep": sweep_jax.run,
         "serving": serving_delay.run,
+        "serving_scale": serving_scale.run,
         "calibration": calibration.run,
         "roofline": roofline.run,
     }

@@ -1,0 +1,135 @@
+"""Serving-engine throughput: the Python tick loop vs the jitted JAX fleet.
+
+Times the same ``serve_flash_crowd`` workload three ways —
+
+  * ``python``  — ``ElasticServingFleet.run`` (the bit-exact oracle),
+  * ``jax``     — ``serving_jax.run_workload``, split into cold
+    (trace+compile+run) and steady-state (cached program) so compile
+    amortization is visible,
+  * ``cube``    — a (threshold x max_transient) sweep through
+    ``serving_jax.sweep_cube`` as one device program (``lax.map`` over grid
+    points), reported as aggregate simulated-requests/s —
+
+and reports simulated requests/s, ticks/s and the steady-state speedup.
+Numbers are wall-clock on whatever machine runs the benchmark; the
+committed quick-scale baseline gates the *speedup ratio* (same machine on
+both sides of the ratio) and the engine-agreement error, not raw seconds.
+
+Context for the absolute numbers: this container is a single CPU core, so
+XLA executes one grid point at a time and the speedup is the scan-fusion /
+no-interpreter gain (~3-5x at full scale, less at quick scale where the
+tick loop is mostly empty). The cube path exists for parallel backends
+(multi-core CPU, GPU/TPU via ``batch="vmap"``), where grid points map onto
+lanes instead of a sequential ``lax.map``.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] --only serving_scale
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+SCENARIO = "serve_flash_crowd"
+
+
+def _time_python(sc, cfg, requests, pin, max_ticks) -> float:
+    from repro.runtime.serving import ElasticServingFleet, Request
+
+    reqs = [Request(q.rid, q.arrival, q.gen_len, job_id=q.job_id)
+            for q in requests]
+    fleet = ElasticServingFleet.from_config(
+        cfg, seed=0, drain_preference=sc.drain_preference)
+    t0 = time.time()
+    fleet.run(reqs, lambda t: int(pin[t]) if t < len(pin) else 0, max_ticks)
+    return time.time() - t0
+
+
+def run(quick: bool = False) -> dict:
+    from repro.runtime import serving_jax
+    from repro.runtime.serving import build_serving_workload
+    from repro.sched import get_scenario
+
+    sc = get_scenario(SCENARIO)
+    trace = sc.trace(quick=quick, seed=42, trace_overrides={})
+    cfg = sc.serving_config(quick=quick, sim_overrides={})
+    requests, _, max_ticks, wl = build_serving_workload(trace, cfg)
+    pin = np.asarray(wl["pinned_per_tick"])
+    n_req = len(requests)
+
+    t_py = _time_python(sc, cfg, requests, pin, max_ticks)
+
+    serving_jax.cache_clear()
+    t0 = time.time()
+    m_cold, _, spec = serving_jax.run_workload(
+        cfg, requests, pin, max_ticks,
+        drain_preference=sc.drain_preference, sim_seed=0)
+    t_cold = time.time() - t0
+    t0 = time.time()
+    m_jx, _, _ = serving_jax.run_workload(
+        cfg, requests, pin, max_ticks,
+        drain_preference=sc.drain_preference, sim_seed=1, spec=spec)
+    t_jx = time.time() - t0
+
+    # python reference metrics for the agreement check (sim_seed=0 cold run
+    # vs the oracle's own seed-0 run; stochastic tie-breaks differ, so this
+    # is a sanity band, not the tight equivalence test in tests/)
+    from repro import exp
+
+    rr_py = exp.run(sc, engine="serving", quick=quick, seed=42, sim_seed=0,
+                    trace=trace)
+    avg_rel_err = (abs(m_cold["short_avg_wait_s"]
+                       - rr_py.metrics["short_avg_wait_s"])
+                   / max(rr_py.metrics["short_avg_wait_s"], 1e-9))
+
+    # sweep cube: one device program over (threshold x max_transient)
+    thr = [cfg.threshold, cfg.threshold * 1.5]
+    ks = [max(cfg.max_transient // 2, 1), cfg.max_transient]
+    if not quick:
+        thr.append(cfg.threshold * 0.5)
+    t0 = time.time()
+    grids, _ = serving_jax.sweep_cube(
+        cfg, requests, pin, max_ticks, thresholds=thr, max_transients=ks,
+        max_slots_values=[cfg.max_slots], sim_seeds=(0,),
+        drain_preference=sc.drain_preference)
+    t_cube = time.time() - t0
+    n_points = len(thr) * len(ks)
+
+    return {
+        "scenario": SCENARIO,
+        "quick": bool(quick),
+        "n_requests": n_req,
+        "n_ticks": int(max_ticks),
+        "python": {
+            "seconds": t_py,
+            "req_per_s": n_req / t_py,
+            "ticks_per_s": max_ticks / t_py,
+        },
+        "jax": {
+            "cold_seconds": t_cold,
+            "steady_seconds": t_jx,
+            "compile_overhead_s": t_cold - t_jx,
+            "req_per_s": n_req / t_jx,
+            "ticks_per_s": max_ticks / t_jx,
+            "n_done": m_jx["n_done"],
+            "n_queue_overflow": m_jx["n_queue_overflow"],
+        },
+        "cube": {
+            "n_points": n_points,
+            "seconds": t_cube,
+            "req_per_s": n_points * n_req / t_cube,
+            "points_per_s": n_points / t_cube,
+            "best_avg_wait_s": float(
+                np.min(grids["short_avg_wait_s"])),
+        },
+        "speedup_steady": t_py / t_jx,
+        "speedup_cold": t_py / t_cold,
+        "agreement": {"avg_wait_rel_err": avg_rel_err},
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(quick=True), indent=1, default=float))

@@ -22,8 +22,8 @@ from repro.exp.compare import (COMPARE_METRICS, calibrate,  # noqa: F401
                                calibrate_registry, compare_engines)
 from repro.exp.results import (CANONICAL_METRICS, REQUIRED_SERIES,  # noqa: F401
                                RunResult, from_fluid_output,
-                               from_serving_fleet, from_sim_result,
-                               validate_run_result)
+                               from_serving_fleet, from_serving_jax,
+                               from_sim_result, validate_run_result)
 from repro.exp.runner import (OVERRIDE_SPEC, Override,  # noqa: F401
                               SweepResult, engine_names, register_engine,
                               resolve_overrides, run, sweep)

@@ -15,8 +15,10 @@ through this one frozen record:
 
 Adapters: :func:`from_sim_result` (DES — also reachable as
 ``SimResult.to_run_result``), :func:`from_fluid_output` (the dict
-``repro.core.simjax.simulate_fluid`` returns) and
-:func:`from_serving_fleet` (``repro.runtime.serving.ElasticServingFleet``).  Serialization is
+``repro.core.simjax.simulate_fluid`` returns),
+:func:`from_serving_fleet` (``repro.runtime.serving.ElasticServingFleet``)
+and :func:`from_serving_jax` (the metric/series bundle
+``repro.runtime.serving_jax.run_workload`` emits).  Serialization is
 deterministic: ``to_json`` sorts keys; ``save``/``load`` round-trip through
 JSON (scalars) or flat npz (scalars + series), checked in tests/test_exp.py.
 """
@@ -54,6 +56,7 @@ REQUIRED_SERIES = {
     "des": ("short_waits", "lr"),
     "fluid": ("short_delay", "lr"),
     "serving": ("short_waits", "active_transients", "batch_occupancy"),
+    "serving_jax": ("short_waits", "active_transients", "batch_occupancy"),
 }
 
 
@@ -86,7 +89,7 @@ def validate_run_result(rr: "RunResult") -> list:
             problems.append(f"empty series {name!r}")
     if rr.seed is None:
         problems.append("seed (trace provenance) not set")
-    if rr.engine in ("des", "serving") and rr.sim_seed is None:
+    if rr.engine in ("des", "serving", "serving_jax") and rr.sim_seed is None:
         problems.append("sim_seed (engine provenance) not set")
     if not rr.config:
         problems.append("resolved config missing")
@@ -352,7 +355,11 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
     ``config.tick_s``) onto the DES's task-wait metrics through the shared
     ``_pctl`` guard; serving extras (hedges, cancellations, revocations,
     transient usage) ride alongside.  Requests never started by run end are
-    censored out of the wait metrics and reported as ``n_unfinished``.
+    censored out of the wait metrics and reported as ``n_unfinished``; a run
+    where *nothing* started yields finite zeros (the ``_pctl`` empty-input
+    convention), never NaN/inf — ``validate_run_result`` rejects non-finite
+    canonical metrics, so a crashed adapter can't sneak a NaN through as
+    "valid".
     """
     summary = fleet.summary(requests)
     tick_s = float(config.tick_s)
@@ -370,8 +377,8 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
     if pinned is not None:
         series["pinned_replicas"] = np.asarray(pinned, float)
     metrics = {
-        "short_avg_wait_s": float(np.mean(waits)) if waits.size else float("nan"),
-        "short_max_wait_s": float(np.max(waits)) if waits.size else float("nan"),
+        "short_avg_wait_s": float(np.mean(waits)) if waits.size else 0.0,
+        "short_max_wait_s": float(np.max(waits)) if waits.size else 0.0,
         "short_p50_wait_s": _pctl(waits, 50),
         "short_p90_wait_s": _pctl(waits, 90),
         "short_p99_wait_s": _pctl(waits, 99),
@@ -397,5 +404,41 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
     return RunResult(
         engine="serving", scenario=scenario, config=_jsonable(cfg),
         overrides=dict(overrides or {}), metrics=metrics, series=series,
+        seed=seed, sim_seed=sim_seed, quick=quick,
+        wall_time_s=float(wall_time_s), meta=meta)
+
+
+def from_serving_jax(metrics: Dict[str, float], series: Dict, *,
+                     scenario: str, config, spec=None,
+                     workload_meta: Optional[Dict] = None,
+                     overrides: Optional[Dict] = None, quick: bool = False,
+                     seed: Optional[int] = None,
+                     sim_seed: Optional[int] = None,
+                     wall_time_s: float = 0.0, trace=None) -> RunResult:
+    """Serving-JAX adapter: ``repro.runtime.serving_jax.run_workload``
+    output -> ``RunResult``.
+
+    ``run_workload`` already emits the canonical metric names and the
+    ``from_serving_fleet`` series (its ``summarize`` goes through the same
+    ``_pctl`` guard), so this adapter only attaches provenance: the resolved
+    fleet config, the static :class:`~repro.runtime.serving_jax.FleetSpec`
+    (the compiled-program cache key, recorded under ``meta["fleet_spec"]``
+    so a persisted result pins its bucketing) and the workload meta.
+    """
+    series = {k: np.asarray(v, float) for k, v in series.items()}
+    wl_meta = dict(workload_meta or {})
+    pinned = wl_meta.pop("pinned_per_tick", None)
+    if pinned is not None:
+        series.setdefault("pinned_replicas", np.asarray(pinned, float))
+    cfg = asdict(config) if is_dataclass(config) else dict(config or {})
+    meta = {"workload": _jsonable(wl_meta)}
+    if spec is not None:
+        meta["fleet_spec"] = _jsonable(spec)
+    if trace is not None:
+        meta["trace"] = _trace_meta(trace)
+    return RunResult(
+        engine="serving_jax", scenario=scenario, config=_jsonable(cfg),
+        overrides=dict(overrides or {}),
+        metrics={k: float(v) for k, v in metrics.items()}, series=series,
         seed=seed, sim_seed=sim_seed, quick=quick,
         wall_time_s=float(wall_time_s), meta=meta)

@@ -1,14 +1,17 @@
 """The one experiment entry point: ``run(scenario, engine=...)`` and grid
 ``sweep(scenario, grid, engine=...)``.
 
-Engines are pluggable adapters registered in :data:`ENGINES`; both built-ins
+Engines are pluggable adapters registered in :data:`ENGINES`; the built-ins
 (``des`` — the exact discrete-event simulator, ``fluid`` — the JAX slotted
 model, ``serving`` — the pod-level elastic serving fleet driven by the same
-trace builders) take the same call signature and emit the same
+trace builders, ``serving_jax`` — the same fleet as one jitted JAX program)
+take the same call signature and emit the same
 :class:`~repro.exp.results.RunResult` schema, so a consumer can flip engines
 with one string.  ``sweep`` fans a scenario out over a parameter grid:
-serial (optionally multiprocess) DES runs per grid point, or the vmapped
-(replace_fraction x threshold x max_transient) cube for the fluid engine —
+serial (optionally multiprocess) DES runs per grid point, or a
+single-device-program cube for the array engines (the vmapped
+(replace_fraction x threshold x max_transient) cube for ``fluid``, the
+(threshold x max_transient x max_slots) cube for ``serving_jax``) —
 same signature, results addressable by grid point either way.
 
 Register a new engine adapter::
@@ -40,7 +43,7 @@ import numpy as np
 
 from repro.exp.results import (RunResult, _jsonable, _load_npz, _save_npz,
                                from_fluid_output, from_serving_fleet,
-                               from_sim_result)
+                               from_serving_jax, from_sim_result)
 from repro.sched import Scenario, get_scenario
 
 # --------------------------------------------------------- declarative overrides
@@ -241,9 +244,53 @@ def _run_serving(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
         wall_time_s=time.time() - t0, trace=trace)
 
 
+def _serving_jax_setup(sc: Scenario, *, quick: bool, seed: int, trace,
+                       trace_overrides: Dict, sim_overrides: Dict):
+    """Shared trace -> (cfg, requests, pinning, wl_meta, spot) prologue for
+    the serving_jax run and sweep paths."""
+    from repro.runtime.serving import build_serving_workload
+
+    if trace is None:
+        trace = sc.trace(quick=quick, seed=seed,
+                         trace_overrides=trace_overrides)
+    cfg = sc.serving_config(quick=quick, sim_overrides=sim_overrides)
+    requests, _, max_ticks, wl_meta = build_serving_workload(trace, cfg)
+    _, short_pol = sc.policies()
+    spot = getattr(short_pol, "name", "") == "spot_aware"
+    return trace, cfg, requests, max_ticks, wl_meta, spot
+
+
+def _run_serving_jax(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
+                     trace, trace_overrides: Dict, sim_overrides: Dict,
+                     queue_cap: Optional[int] = None) -> RunResult:
+    """Device serving engine (``repro.runtime.serving_jax``): the same
+    trace -> request-stream/pinning mapping as ``serving``, simulated as one
+    jitted ``lax.scan`` over ticks instead of the Python tick loop.  Spot
+    revocations / routing tie-breaks come from the JAX PRNG, so individual
+    runs agree with ``serving`` in distribution (exactly, on the
+    deterministic pinned-occupancy path), not draw-for-draw."""
+    from repro.runtime import serving_jax
+
+    t0 = time.time()
+    trace, cfg, requests, max_ticks, wl_meta, spot = _serving_jax_setup(
+        sc, quick=quick, seed=seed, trace=trace,
+        trace_overrides=trace_overrides, sim_overrides=sim_overrides)
+    metrics, series, spec = serving_jax.run_workload(
+        cfg, requests, wl_meta["pinned_per_tick"], max_ticks,
+        drain_preference=sc.drain_preference, spot_pricing=spot,
+        sim_seed=sim_seed, queue_cap=queue_cap)
+    return from_serving_jax(
+        metrics, series, scenario=sc.name, config=cfg, spec=spec,
+        workload_meta=wl_meta,
+        overrides={"trace": trace_overrides, "sim": sim_overrides},
+        quick=quick, seed=seed, sim_seed=sim_seed,
+        wall_time_s=time.time() - t0, trace=trace)
+
+
 register_engine("des", _run_des)
 register_engine("fluid", _run_fluid)
 register_engine("serving", _run_serving)
+register_engine("serving_jax", _run_serving_jax)
 
 
 # ---------------------------------------------------------------- grid sweeps
@@ -365,6 +412,10 @@ def sweep(scenario: Union[str, Scenario], grid: Dict[str, Sequence],
       (``repro.core.simjax.sweep``), missing cube axes pinned to the
       scenario's own value.  Result dims follow the cube order
       (p, threshold, budget) restricted to the requested axes.
+    * ``engine="serving_jax"``: axes from ``threshold`` / ``max_transient``
+      / ``max_slots`` run as **one** device program
+      (``serving_jax.sweep_cube``); any other axis set falls back to the
+      pointwise fan-out below.
     * ``engine="des"`` (or any registered adapter): Cartesian fan-out, one
       full engine run per point — serial, or multiprocess with
       ``processes=N``.  Axis names are ``OVERRIDE_SPEC`` aliases (``r``,
@@ -378,6 +429,12 @@ def sweep(scenario: Union[str, Scenario], grid: Dict[str, Sequence],
         return _sweep_fluid(sc, grid, quick=quick, seed=seed, trace=trace,
                             trace_overrides=trace_overrides,
                             sim_overrides=sim_overrides, **engine_kwargs)
+    if engine == "serving_jax" and set(grid) <= set(_SERVING_JAX_AXES):
+        return _sweep_serving_jax(sc, grid, quick=quick, seed=seed,
+                                  sim_seed=sim_seed, trace=trace,
+                                  trace_overrides=trace_overrides,
+                                  sim_overrides=sim_overrides,
+                                  **engine_kwargs)
     return _sweep_pointwise(sc, grid, engine, quick=quick, seed=seed,
                             sim_seed=sim_seed, trace=trace,
                             trace_overrides=trace_overrides,
@@ -429,6 +486,64 @@ def _sweep_fluid(sc: Scenario, grid: Dict[str, Sequence], *, quick: bool,
     return SweepResult(
         engine="fluid", scenario=sc.name, axes=axes, metrics=metrics,
         meta={"quick": quick, "seed": seed, "dt": dt,
+              "n_points": int(np.prod([len(v) for v in axes.values()])),
+              "wall_time_s": time.time() - t0})
+
+
+#: sweep axes the serving_jax cube evaluates as one device program; any
+#: other axis set falls back to the pointwise fan-out
+_SERVING_JAX_AXES = ("threshold", "max_transient", "max_slots")
+
+
+def _sweep_serving_jax(sc: Scenario, grid: Dict[str, Sequence], *,
+                       quick: bool, seed: int, sim_seed: int, trace,
+                       trace_overrides: Optional[Dict],
+                       sim_overrides: Optional[Dict],
+                       sim_seeds: Optional[Sequence[int]] = None,
+                       queue_cap: Optional[int] = None,
+                       batch: str = "map") -> SweepResult:
+    """The (threshold x max_transient x max_slots) serving cube as one
+    device program (``serving_jax.sweep_cube``): one trace, one compile,
+    every grid point through the same jitted simulator.  ``sim_seeds``
+    averages the grid over several engine seeds (default: just
+    ``sim_seed``); missing cube axes are pinned to the scenario's value and
+    dropped from the result dims, mirroring the fluid sweep."""
+    from repro.runtime import serving_jax
+
+    t0 = time.time()
+    trace, cfg, requests, max_ticks, wl_meta, spot = _serving_jax_setup(
+        sc, quick=quick, seed=seed, trace=trace,
+        trace_overrides=dict(trace_overrides or {}),
+        sim_overrides=dict(sim_overrides or {}))
+    seeds = tuple(sim_seeds) if sim_seeds is not None else (sim_seed,)
+    full_axes = {
+        "threshold": np.asarray(grid.get("threshold", [cfg.threshold]),
+                                float),
+        "max_transient": np.asarray(grid.get("max_transient",
+                                             [cfg.max_transient]), float),
+        "max_slots": np.asarray(grid.get("max_slots", [cfg.max_slots]),
+                                float),
+    }
+    grids, spec = serving_jax.sweep_cube(
+        cfg, requests, wl_meta["pinned_per_tick"], max_ticks,
+        thresholds=full_axes["threshold"],
+        max_transients=full_axes["max_transient"].astype(int),
+        max_slots_values=full_axes["max_slots"].astype(int),
+        sim_seeds=seeds, drain_preference=sc.drain_preference,
+        spot_pricing=spot, queue_cap=queue_cap, batch=batch)
+    keep = [i for i, name in enumerate(full_axes) if name in grid]
+    axes = {name: full_axes[name] for name in full_axes if name in grid}
+    metrics = {}
+    for k, v in grids.items():
+        arr = np.asarray(v)
+        for i in reversed(range(arr.ndim)):
+            if i not in keep:
+                arr = arr.take(0, axis=i)
+        metrics[k] = arr
+    return SweepResult(
+        engine="serving_jax", scenario=sc.name, axes=axes, metrics=metrics,
+        meta={"quick": quick, "seed": seed, "sim_seeds": list(seeds),
+              "batch": batch, "fleet_spec": _jsonable(spec),
               "n_points": int(np.prod([len(v) for v in axes.values()])),
               "wall_time_s": time.time() - t0})
 

@@ -44,9 +44,10 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized scale (400 servers / 4 h)")
     ap.add_argument("--engine", default=None,
-                    choices=["des", "fluid", "serving"],
+                    choices=["des", "fluid", "serving", "serving_jax"],
                     help="engine adapter (default des; 'serving' runs the "
-                         "pod-level elastic serving fleet)")
+                         "pod-level elastic serving fleet, 'serving_jax' "
+                         "the same fleet as one jitted JAX program)")
     ap.add_argument("--fluid", action="store_true",
                     help="alias for --engine fluid")
     ap.add_argument("--out", default=None, metavar="FILE",

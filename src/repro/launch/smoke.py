@@ -2,7 +2,9 @@
 
 Fans the (scenario x engine) catalog out over processes through
 ``repro.exp.run``: every registered scenario on the DES and fluid engines,
-the ``serve_*`` presets additionally on the serving engine. Each run
+the ``serve_*`` presets additionally on the serving and serving_jax
+engines (the latter serially in the driver process, sharing one
+compiled-program cache across presets). Each run
 persists one ``<scenario>-<engine>.runresult.npz``; the driver then
 *re-loads* every persisted RunResult in the output directory and validates
 the schema (``repro.exp.validate_run_result``: canonical metric names
@@ -27,14 +29,19 @@ import sys
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-#: scenarios with this prefix also run on the serving engine (mirrors the
+#: scenarios with this prefix also run on the serving engines (mirrors the
 #: retired ci.yml serving-presets bash loop)
 SERVING_PREFIX = "serve_"
+
+#: engines kept out of the process pool: serving_jax jobs share one
+#: in-process compiled-program cache (same FleetSpec -> no re-trace), where
+#: a pool worker would pay the XLA compile per process for zero overlap
+SINGLE_PROCESS_ENGINES = ("serving_jax",)
 
 
 def catalog(names: Optional[Sequence[str]] = None) -> List[Tuple[str, str]]:
     """The (scenario, engine) job list: DES + fluid for every scenario,
-    serving additionally for the ``serve_*`` presets."""
+    serving and serving_jax additionally for the ``serve_*`` presets."""
     from repro.sched import scenario_names
 
     jobs: List[Tuple[str, str]] = []
@@ -43,6 +50,7 @@ def catalog(names: Optional[Sequence[str]] = None) -> List[Tuple[str, str]]:
         jobs.append((name, "fluid"))
         if name.startswith(SERVING_PREFIX):
             jobs.append((name, "serving"))
+            jobs.append((name, "serving_jax"))
     return jobs
 
 
@@ -72,12 +80,18 @@ def run_catalog(out_dir: pathlib.Path, *, quick: bool, seed: int,
                 names: Optional[Sequence[str]] = None) -> List[Dict]:
     payloads = [(n, e, quick, seed, str(out_dir))
                 for n, e in catalog(names)]
-    if processes > 1:
+    pooled = [p for p in payloads if p[1] not in SINGLE_PROCESS_ENGINES]
+    serial = [p for p in payloads if p[1] in SINGLE_PROCESS_ENGINES]
+    results: List[Dict] = []
+    if processes > 1 and pooled:
         from concurrent.futures import ProcessPoolExecutor
 
         with ProcessPoolExecutor(max_workers=processes) as pool:
-            return list(pool.map(_run_one, payloads))
-    return [_run_one(p) for p in payloads]
+            results.extend(pool.map(_run_one, pooled))
+    else:
+        results.extend(_run_one(p) for p in pooled)
+    results.extend(_run_one(p) for p in serial)
+    return results
 
 
 def validate_dir(out_dir: pathlib.Path) -> List[Dict]:

@@ -3,4 +3,6 @@ from repro.runtime.elastic import ElasticTrainer  # noqa: F401
 from repro.runtime.serving import (ElasticServingFleet, Request,  # noqa: F401
                                    ServingFleetConfig,
                                    build_serving_workload)
+from repro.runtime.serving_jax import (FleetSpec, make_spec,  # noqa: F401
+                                       run_workload, sweep_cube)
 from repro.runtime.straggler import StragglerWatchdog  # noqa: F401

@@ -547,14 +547,20 @@ class ElasticServingFleet:
         return self.summary(requests)
 
     def summary(self, requests: List[Request]) -> Dict[str, float]:
+        from repro.core.metrics import _pctl
+
         waits = [q.wait for q in requests if q.wait is not None]
         done = [q for q in requests if q.finish is not None]
+        # zero started requests -> finite zeros (the shared _pctl
+        # empty-input convention), never inf: downstream schema checks
+        # reject non-finite metrics, and a stalled run should read as
+        # "nothing served", not as an unrepresentable wait
         return {
             "n_requests": len(requests),
             "n_done": len(done),
-            "avg_wait": float(np.mean(waits)) if waits else float("inf"),
-            "p99_wait": float(np.percentile(waits, 99)) if waits else float("inf"),
-            "max_wait": float(np.max(waits)) if waits else float("inf"),
+            "avg_wait": float(np.mean(waits)) if waits else 0.0,
+            "p99_wait": _pctl(np.asarray(waits, float), 99),
+            "max_wait": float(np.max(waits)) if waits else 0.0,
             "avg_active_transients": self._active_area / max(self._ticks, 1),
             "peak_active_transients": self.peak_active,
             "n_transients_used": len([r for r in self.replicas

@@ -1,0 +1,313 @@
+"""Equivalence, conservation and caching tests for the JAX serving engine
+(``repro.runtime.serving_jax``) against the Python oracle
+(``ElasticServingFleet``):
+
+  * deterministic pinned-occupancy paths reproduce the oracle bit-for-bit
+    (wait multisets, lifetimes, counters, occupancy areas);
+  * quick-scale ``serve_*`` scenarios agree on the canonical wait /
+    transient metrics within tolerance, seed-averaged (routing tie-breaks
+    and spot revocations come from a different PRNG, so individual seeds
+    differ in distribution only);
+  * conservation properties over random workloads: every request is done
+    or unfinished (overflow included), paid transient-capacity area
+    matches the recorded lifetimes exactly;
+  * the compiled-program cache never re-traces a repeated spec, and the
+    ``lax.map`` sweep cube equals the single-point program pointwise;
+  * the serving summary / RunResult adapters emit finite zeros (never
+    NaN/inf) when nothing completed.
+"""
+
+import numpy as np
+import pytest
+
+from repro import exp
+from repro.runtime import serving_jax as sj
+from repro.runtime.serving import (ElasticServingFleet, Request,
+                                   ServingFleetConfig,
+                                   build_serving_workload)
+from repro.sched import get_scenario
+
+# ----------------------------------------------------------------- helpers
+
+
+def _py_run(cfg, reqs_proto, pin, max_ticks, drain="least_loaded", seed=0):
+    reqs = [Request(q.rid, q.arrival, q.gen_len, job_id=q.job_id)
+            for q in reqs_proto]
+    fleet = ElasticServingFleet.from_config(cfg, seed=seed,
+                                            drain_preference=drain)
+    summary = fleet.run(reqs, lambda t: int(pin[t]) if t < len(pin) else 0,
+                        max_ticks)
+    return fleet, reqs, summary
+
+
+def _raw_jax_run(cfg, reqs, pin, max_ticks, sim_seed=0, queue_cap=None):
+    """-> (spec, out-dict as numpy) via the cached compiled program."""
+    arr = [q.arrival for q in reqs]
+    spec = sj.make_spec(cfg, n_requests=len(reqs), max_ticks=max_ticks,
+                        max_arrivals_per_tick=int(np.bincount(arr).max()),
+                        queue_cap=queue_cap)
+    consts = sj.build_consts(spec, reqs, pin)
+    out = sj.get_program(spec)(sj.make_params(cfg), consts,
+                               sj._seed_key(sim_seed))
+    return spec, {k: np.asarray(v) for k, v in out.items()}
+
+
+def _rand_workload(seed, n=80, T=400):
+    rng = np.random.default_rng(seed)
+    arr = np.sort(rng.integers(0, T - 20, n))
+    reqs = [Request(i, int(arr[i]), int(rng.integers(1, 6)))
+            for i in range(n)]
+    pin = np.zeros(T, int)
+    pin[50:150] = int(rng.integers(1, 3))
+    pin[300:T] = 2  # keep transients online through run end
+    return reqs, pin
+
+
+_SMALL_CFG = ServingFleetConfig(n_replicas=2, max_transient=2, threshold=0.5,
+                                provisioning_delay=3.0, tick_s=1.0)
+
+
+# ------------------------------------------- deterministic bit-exact paths
+#
+# Single on-demand replica and at most one transient: no probing choice is
+# ever random (d-choices over one candidate), so the oracle and the JAX
+# engine must agree exactly — waits, lifetimes, counters, occupancy areas.
+
+def _assert_exact(cfg, reqs_proto, pin, max_ticks):
+    fleet, reqs, s = _py_run(cfg, reqs_proto, pin, max_ticks)
+    m, series, _ = sj.run_workload(cfg, reqs_proto, pin, max_ticks,
+                                   sim_seed=0)
+    py_waits = sorted(q.wait for q in reqs if q.wait is not None)
+    jx_waits = sorted((series["short_waits"] / cfg.tick_s).astype(int))
+    assert jx_waits == py_waits
+    for key in ("n_done", "n_transients_used", "n_hedges",
+                "n_hedge_cancelled", "n_revocations",
+                "avg_active_transients", "peak_active_transients"):
+        assert m[key] == pytest.approx(float(s[key if key != "n_done"
+                                              else "n_done"])), key
+    assert m["avg_slot_occupancy"] == pytest.approx(
+        s["avg_slot_occupancy"])
+    assert m["transient_slot_occupancy"] == pytest.approx(
+        s["transient_slot_occupancy"])
+    assert sorted((series["transient_lifetimes"] / cfg.tick_s).astype(int)
+                  ) == sorted(int(v) for v in fleet.lifetimes)
+
+
+def test_exact_single_replica_no_pinning():
+    cfg = ServingFleetConfig(n_replicas=1, max_transient=0, threshold=0.5,
+                             provisioning_delay=3.0, tick_s=1.0)
+    reqs = [Request(0, 0, 3), Request(1, 0, 2), Request(2, 4, 1)]
+    _assert_exact(cfg, reqs, np.zeros(30, int), 30)
+
+
+def test_exact_pin_window_rents_transient():
+    cfg = ServingFleetConfig(n_replicas=1, max_transient=1, threshold=0.5,
+                             provisioning_delay=3.0, tick_s=1.0)
+    pin = np.zeros(40, int)
+    pin[5:20] = 1
+    reqs = [Request(0, 0, 3), Request(1, 2, 4), Request(2, 6, 2),
+            Request(3, 8, 3), Request(4, 12, 2), Request(5, 21, 1)]
+    _assert_exact(cfg, reqs, pin, 40)
+
+
+def test_exact_two_slot_batching():
+    cfg = ServingFleetConfig(n_replicas=1, max_transient=1, max_slots=2,
+                             threshold=0.5, provisioning_delay=3.0)
+    pin = np.zeros(40, int)
+    pin[5:20] = 1
+    reqs = [Request(0, 0, 3), Request(1, 2, 4), Request(2, 6, 2),
+            Request(3, 8, 3), Request(4, 12, 2), Request(5, 21, 1)]
+    _assert_exact(cfg, reqs, pin, 40)
+
+
+# --------------------------------------- quick-scale stochastic agreement
+
+#: (metric, seed-averaged relative tolerance) — routing tie-breaks come
+#: from a different PRNG, so per-seed values differ; the seed-mean must
+#: land within these bands (measured spread plus headroom, see the module
+#: docstring in serving_jax.py for the deviation inventory)
+_AGREE_TOL = {
+    "short_avg_wait_s": 0.05,
+    "short_max_wait_s": 0.05,
+    "short_p50_wait_s": 0.10,
+    "short_p90_wait_s": 0.05,
+    "short_p99_wait_s": 0.05,
+    "avg_active_transients": 0.01,
+    "peak_active_transients": 0.01,
+}
+
+
+@pytest.mark.parametrize("scenario,n_seeds,slack", [
+    ("serve_yahoo", 4, 1.0),
+    ("serve_batched_flash_crowd", 3, 1.0),
+    # small absolute waits make percentile ratios noisy: widen the bands
+    ("serve_batched_yahoo", 3, 1.5),
+    # spot adds revocation-draw divergence on top: double the bands
+    ("serve_spot", 3, 2.0),
+])
+def test_quick_scale_agreement(scenario, n_seeds, slack):
+    sc = get_scenario(scenario)
+    trace = sc.trace(quick=True, seed=42, trace_overrides={})
+    cfg = sc.serving_config(quick=True, sim_overrides={})
+    requests, _, max_ticks, wl = build_serving_workload(trace, cfg)
+    _, short_pol = sc.policies()
+    spot = getattr(short_pol, "name", "") == "spot_aware"
+    py, jx = [], []
+    keys = list(_AGREE_TOL)
+    spec = None
+    for s in range(n_seeds):
+        rr = exp.run(sc, engine="serving", quick=True, seed=42, sim_seed=s,
+                     trace=trace)
+        py.append([rr.metrics[k] for k in keys])
+        m, _, spec = sj.run_workload(cfg, requests, wl["pinned_per_tick"],
+                                     max_ticks,
+                                     drain_preference=sc.drain_preference,
+                                     spot_pricing=spot, sim_seed=s,
+                                     spec=spec)
+        jx.append([m[k] for k in keys])
+    py_mean = np.asarray(py).mean(axis=0)
+    jx_mean = np.asarray(jx).mean(axis=0)
+    for i, k in enumerate(keys):
+        rel = abs(jx_mean[i] - py_mean[i]) / max(abs(py_mean[i]), 1e-9)
+        assert rel <= _AGREE_TOL[k] * slack, (
+            f"{scenario}/{k}: py={py_mean[i]:.2f} jx={jx_mean[i]:.2f} "
+            f"rel={rel:.2%} > {_AGREE_TOL[k] * slack:.0%}")
+
+
+# --------------------------------------------------- conservation properties
+
+@pytest.mark.parametrize("seed", range(4))
+def test_request_conservation(seed):
+    """Every request is exactly one of done / in-flight / never-started at
+    run end, with queue overflow drops counted on the never-started side."""
+    reqs, pin = _rand_workload(100 + seed)
+    n, T = len(reqs), 400
+    spec, out = _raw_jax_run(_SMALL_CFG, reqs, pin, T, sim_seed=seed)
+    start, finish = out["start"][:n], out["finish"][:n]
+    n_done = int((finish >= 0).sum())
+    n_started = int((start >= 0).sum())
+    assert n_done <= n_started <= n
+    assert np.all(finish[finish >= 0] >= start[finish >= 0])
+    arrivals = np.asarray([q.arrival for q in reqs])
+    assert np.all(start[start >= 0] >= arrivals[start >= 0])
+    m, _, _ = sj.run_workload(_SMALL_CFG, reqs, pin, T, sim_seed=seed)
+    assert m["n_done"] + m["n_unfinished"] == m["n_requests"] == n
+
+
+def test_overflow_drops_are_counted():
+    rng = np.random.default_rng(7)
+    # everyone arrives in a 10-tick burst onto a tiny queue
+    reqs = [Request(i, int(rng.integers(0, 10)), int(rng.integers(3, 8)))
+            for i in range(64)]
+    reqs.sort(key=lambda q: q.arrival)
+    reqs = [Request(i, q.arrival, q.gen_len) for i, q in enumerate(reqs)]
+    pin = np.zeros(200, int)
+    m, _, _ = sj.run_workload(_SMALL_CFG, reqs, pin, 200, sim_seed=0,
+                              queue_cap=8)
+    assert m["n_queue_overflow"] > 0
+    assert m["n_done"] + m["n_unfinished"] == m["n_requests"] == 64
+    assert m["n_unfinished"] >= m["n_queue_overflow"] - 8 * _SMALL_CFG.max_slots
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_paid_capacity_matches_lifetimes(seed):
+    """Paid transient slot-tick area == max_slots x (recorded lifetimes,
+    endpoint-inclusive, plus the residual of transients still online at run
+    end) — exact, every seed."""
+    reqs, pin = _rand_workload(100 + seed)
+    T = 400
+    spec, out = _raw_jax_run(_SMALL_CFG, reqs, pin, T, sim_seed=seed)
+    life_sum, n_life = int(out["lifetime_sum"]), int(out["n_lifetimes"])
+    still = out["final_tr_online"]
+    resid = int(np.sum(T - out["final_online_at"][still]))
+    assert int(out["tr_cap"].sum()) == _SMALL_CFG.max_slots * (
+        life_sum + n_life + resid)
+    if int(out["n_rentals"]) == 0:
+        assert int(out["tr_cap"].sum()) == 0
+
+
+# --------------------------------------------- program cache & sweep cube
+
+def test_program_cache_never_retraces_repeated_spec():
+    reqs, pin = _rand_workload(1)
+    sj.cache_clear()
+    _, _, spec = sj.run_workload(_SMALL_CFG, reqs, pin, 400, sim_seed=0)
+    info = sj.cache_info()
+    assert (info.hits, info.misses, info.size) == (0, 1, 1)
+    # same shapes, different seed / params: cache hit, no re-trace
+    sj.run_workload(_SMALL_CFG, reqs, pin, 400, sim_seed=3, spec=spec)
+    sj.run_workload(_SMALL_CFG, reqs, pin, 400, sim_seed=5)
+    info = sj.cache_info()
+    assert (info.hits, info.misses, info.size) == (2, 1, 1)
+    with pytest.raises(ValueError, match="batch"):
+        sj.get_program(spec, batch="bogus")
+
+
+def test_sweep_cube_matches_single_point_program():
+    """Every cube grid point equals an explicit single-point run with the
+    same (widened) spec — the ``lax.map`` batching changes execution
+    schedule, not semantics."""
+    reqs, pin = _rand_workload(2)
+    T = 400
+    thr = [0.5, 2.0]
+    ks = [1, 2]
+    grids, spec = sj.sweep_cube(_SMALL_CFG, reqs, pin, T, thresholds=thr,
+                                max_transients=ks, max_slots_values=[1],
+                                sim_seeds=(0,))
+    assert grids["short_avg_wait_s"].shape == (2, 2, 1)
+    consts = sj.build_consts(spec, reqs, pin)
+    prog = sj.get_program(spec)
+    for i, t in enumerate(thr):
+        for j, k in enumerate(ks):
+            params = sj.make_params(_SMALL_CFG, threshold=t, max_transient=k,
+                                    max_slots=1)
+            out = prog(params, consts, sj._seed_key(0))
+            m, _ = sj.summarize(spec, {k2: np.asarray(v) for k2, v in
+                                       out.items()}, consts,
+                                _SMALL_CFG.tick_s)
+            assert grids["short_avg_wait_s"][i, j, 0] == pytest.approx(
+                m["short_avg_wait_s"]), (t, k)
+            assert grids["n_done"][i, j, 0] == m["n_done"]
+
+
+# ------------------------------------------------------- exp integration
+
+def test_exp_run_and_sweep_integration(tmp_path):
+    assert "serving_jax" in exp.engine_names()
+    rr = exp.run("serve_flash_crowd", engine="serving_jax", quick=True,
+                 seed=42, sim_seed=0)
+    assert rr.engine == "serving_jax"
+    assert exp.validate_run_result(rr) == []
+    assert "fleet_spec" in rr.meta
+    path = rr.save(tmp_path / "x.runresult.npz")
+    rr2 = exp.RunResult.load(path)
+    assert rr.equals(rr2)
+    py = exp.run("serve_flash_crowd", engine="serving", quick=True,
+                 seed=42, sim_seed=0)
+    assert rr.metrics["n_done"] == py.metrics["n_done"]
+    assert rr.metrics["short_avg_wait_s"] == pytest.approx(
+        py.metrics["short_avg_wait_s"], rel=0.10)
+
+    sw = exp.sweep("serve_flash_crowd", {"threshold": [0.5, 1.5]},
+                   engine="serving_jax", quick=True, seed=42, sim_seed=0)
+    assert sw.engine == "serving_jax"
+    assert sw.metrics["short_avg_wait_s"].shape == (2,)
+    # higher threshold rents fewer transients -> no better service
+    assert (sw.metrics["short_avg_wait_s"][1]
+            >= sw.metrics["short_avg_wait_s"][0])
+    assert sw.meta["batch"] == "map"
+
+
+# ------------------------------------- empty-run guards (summary adapters)
+
+def test_summary_finite_zeros_when_nothing_completed():
+    fleet = ElasticServingFleet.from_config(_SMALL_CFG, seed=0)
+    s = fleet.run([], lambda t: 0, 10)
+    for k in ("avg_wait", "p99_wait", "max_wait"):
+        assert s[k] == 0.0
+    rr = exp.from_serving_fleet(fleet, [], scenario="empty",
+                                config=_SMALL_CFG, sim_seed=0, seed=0)
+    assert all(np.isfinite(v) for v in rr.metrics.values())
+    # the schema gate still rejects it — on the empty series, not on NaN
+    problems = exp.validate_run_result(rr)
+    assert problems and all("series" in p for p in problems)
