@@ -41,9 +41,9 @@ def _time_python(sc, cfg, requests, pin, max_ticks) -> float:
             for q in requests]
     fleet = ElasticServingFleet.from_config(
         cfg, seed=0, drain_preference=sc.drain_preference)
-    t0 = time.time()
+    t0 = time.perf_counter()
     fleet.run(reqs, lambda t: int(pin[t]) if t < len(pin) else 0, max_ticks)
-    return time.time() - t0
+    return time.perf_counter() - t0
 
 
 def run(quick: bool = False) -> dict:
@@ -61,16 +61,16 @@ def run(quick: bool = False) -> dict:
     t_py = _time_python(sc, cfg, requests, pin, max_ticks)
 
     serving_jax.cache_clear()
-    t0 = time.time()
+    t0 = time.perf_counter()
     m_cold, _, spec = serving_jax.run_workload(
         cfg, requests, pin, max_ticks,
         drain_preference=sc.drain_preference, sim_seed=0)
-    t_cold = time.time() - t0
-    t0 = time.time()
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
     m_jx, _, _ = serving_jax.run_workload(
         cfg, requests, pin, max_ticks,
         drain_preference=sc.drain_preference, sim_seed=1, spec=spec)
-    t_jx = time.time() - t0
+    t_jx = time.perf_counter() - t0
 
     # python reference metrics for the agreement check (sim_seed=0 cold run
     # vs the oracle's own seed-0 run; stochastic tie-breaks differ, so this
@@ -88,12 +88,12 @@ def run(quick: bool = False) -> dict:
     ks = [max(cfg.max_transient // 2, 1), cfg.max_transient]
     if not quick:
         thr.append(cfg.threshold * 0.5)
-    t0 = time.time()
+    t0 = time.perf_counter()
     grids, _ = serving_jax.sweep_cube(
         cfg, requests, pin, max_ticks, thresholds=thr, max_transients=ks,
         max_slots_values=[cfg.max_slots], sim_seeds=(0,),
         drain_preference=sc.drain_preference)
-    t_cube = time.time() - t0
+    t_cube = time.perf_counter() - t0
     n_points = len(thr) * len(ks)
 
     return {
@@ -126,6 +126,9 @@ def run(quick: bool = False) -> dict:
         "speedup_steady": t_py / t_jx,
         "speedup_cold": t_py / t_cold,
         "agreement": {"avg_wait_rel_err": avg_rel_err},
+        # jit-cache hit/miss + compile-vs-steady histograms from the
+        # repro.obs metrics registry (additive; gated keys stay above)
+        "obs": serving_jax.last_run_obs(),
     }
 
 

@@ -10,6 +10,7 @@ drives everything; the same call with ``max_transient=0`` plus an equal-cost
 on-demand reserve is the static baseline.
 
 Run:  PYTHONPATH=src python examples/serve_bursty.py [--no-model]
+      [--trace-out FILE]   # Perfetto timeline of the elastic run
 """
 
 import sys
@@ -52,6 +53,9 @@ def build_decoder():
 
 def main():
     with_model = "--no-model" not in sys.argv
+    trace_out = None
+    if "--trace-out" in sys.argv:
+        trace_out = sys.argv[sys.argv.index("--trace-out") + 1]
     decode_fn, counter = (None, {"n": 0})
     if with_model:
         decode_fn, counter = build_decoder()
@@ -62,7 +66,18 @@ def main():
     # static baseline: no transients, an on-demand reserve instead
     static = exp.run("serve_yahoo", sim_overrides={
         "max_transient": 0, "n_reserve": STATIC_BUDGET}, **common)
-    elastic = exp.run("serve_yahoo", decode_fn=decode_fn, **common)
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+
+        cfg = get_scenario("serve_yahoo").serving_config(quick=True,
+                                                         sim_overrides={})
+        tracer = Tracer(tick_s=cfg.tick_s)
+    elastic = exp.run("serve_yahoo", decode_fn=decode_fn, tracer=tracer,
+                      record_events=True, **common)
+    if tracer is not None:
+        print(f"trace written to {tracer.export(trace_out)} "
+              f"(open in ui.perfetto.dev)")
 
     print(f"{'':24s}{'static':>12s}{'elastic':>12s}")
     for k in ("short_avg_wait_s", "short_p99_wait_s", "short_max_wait_s",

@@ -38,7 +38,9 @@ import numpy as np
 from repro.core.cluster import Server, SimConfig
 from repro.core.jobs import Trace
 from repro.core.metrics import SimResult
-from repro.sched.controller import ControllerSpec, FleetView, select_drain
+from repro.obs import events as ev
+from repro.sched.controller import (ControllerSpec, FleetView, record_rent,
+                                    select_drain)
 from repro.sched.policy import (EagleProbing, LeastLoadedCentral,
                                 PlacementPolicy, ShortPlacementPolicy)
 
@@ -49,9 +51,12 @@ class _Sim:
     def __init__(self, trace: Trace, cfg: SimConfig, *,
                  long_policy: Optional[PlacementPolicy] = None,
                  short_policy: Optional[ShortPlacementPolicy] = None,
-                 controller: Optional[ControllerSpec] = None):
+                 controller: Optional[ControllerSpec] = None,
+                 recorder=None):
         self.trace = trace
         self.cfg = cfg
+        #: optional obs.EventRecorder; None keeps emission sites one check
+        self.recorder = recorder
         self.rng = np.random.default_rng(cfg.seed)
         self.now = 0.0
         self.events: List = []
@@ -138,6 +143,9 @@ class _Sim:
             self.short_waits.append(wait)
         s.running = (dur, self.now, is_long, job_id)
         s.run_gen += 1
+        if self.recorder is not None:
+            self.recorder.emit(self.now, ev.ADMIT, replica=s.sid,
+                               rid=job_id)
         if is_long:
             self.n_long_busy += 1
             self._manager_tick()
@@ -202,6 +210,7 @@ class _Sim:
             n_active_transient=len(self.active_transients),
         )
         delta = self.controller.desired_delta(view)
+        record_rent(self.recorder, self.now, delta)
         for _ in range(max(delta, 0)):
             self.n_pending_transient += 1
             self.push(self.now + self.controller.provisioning_delay,
@@ -231,6 +240,8 @@ class _Sim:
         self._tint_touch()
         self.active_transients.append(sid)
         self.peak_active = max(self.peak_active, len(self.active_transients))
+        if self.recorder is not None:
+            self.recorder.emit(self.now, ev.PROVISION, replica=sid)
         if cfg.revocation_mttf > 0:
             life = self.rng.exponential(cfg.revocation_mttf)
             self.push(self.now + life, _REVOKE, sid)
@@ -241,12 +252,16 @@ class _Sim:
         s.draining = False
         self._draining_count -= 1
         self.lifetimes.append(self.now - s.online_t)
+        if self.recorder is not None:
+            self.recorder.emit(self.now, ev.DRAIN, replica=s.sid)
 
     def _revoke(self, sid: int):
         s = self.servers[sid]
         if s.shutdown_t is not None:
             return
         self.n_revocations += 1
+        if self.recorder is not None:
+            self.recorder.emit(self.now, ev.REVOKE, replica=sid)
         if sid in self.active_transients:
             self.active_transients.remove(sid)
             self._tint_touch()
@@ -261,12 +276,18 @@ class _Sim:
             requeue.append((dur, start_t, is_long, job_id))
             s.running = None
             self.n_restarted += 1
+            if self.recorder is not None:
+                self.recorder.emit(self.now, ev.DISPLACE, replica=sid,
+                                   rid=job_id)
         s.pending_work = 0.0
         s.n_long = 0
         s.shutdown_t = self.now
         self.lifetimes.append(self.now - s.online_t)
         for dur, _, is_long, job_id in requeue:
             self.n_rescheduled += 1
+            if self.recorder is not None:
+                self.recorder.emit(self.now, ev.REROUTE, replica=sid,
+                                   rid=job_id)
             self._place_short(dur, job_id)
 
     def _sample_lr(self):
@@ -323,10 +344,13 @@ class _Sim:
 def simulate(trace: Trace, cfg: SimConfig, *,
              long_policy: Optional[PlacementPolicy] = None,
              short_policy: Optional[ShortPlacementPolicy] = None,
-             controller: Optional[ControllerSpec] = None) -> SimResult:
+             controller: Optional[ControllerSpec] = None,
+             recorder=None) -> SimResult:
     """Run the DES. Policies default to the paper's configuration
     (centralized least-loaded longs, Eagle probing shorts, §3.2 controller
     derived from ``cfg``); pass ``repro.sched`` objects to swap any of
-    them."""
+    them. ``recorder`` (an ``repro.obs.EventRecorder``) captures the typed
+    scheduler event stream (times in seconds, ``replica`` = server id)."""
     return _Sim(trace, cfg, long_policy=long_policy,
-                short_policy=short_policy, controller=controller).run()
+                short_policy=short_policy, controller=controller,
+                recorder=recorder).run()

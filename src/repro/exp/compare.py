@@ -122,7 +122,7 @@ def calibrate_registry(names: Optional[Sequence[str]] = None, *,
                        fit_metric: str = "short_avg_wait_s") -> Dict:
     """Registry-wide calibration study: per-scenario error tables + fits,
     plus aggregate before/after error (mean |rel err| of the fit metric)."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     names = list(names) if names else scenario_names()
     per_scenario = {}
     rel_before, rel_after = [], []
@@ -140,5 +140,5 @@ def calibrate_registry(names: Optional[Sequence[str]] = None, *,
            "mean_abs_rel_err_before": sum(rel_before) / len(rel_before)}
     if fit:
         out["mean_abs_rel_err_after"] = sum(rel_after) / len(rel_after)
-    out["elapsed_s"] = time.time() - t0
+    out["elapsed_s"] = time.perf_counter() - t0
     return out

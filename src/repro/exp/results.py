@@ -56,8 +56,14 @@ REQUIRED_SERIES = {
     "des": ("short_waits", "lr"),
     "fluid": ("short_delay", "lr"),
     "serving": ("short_waits", "active_transients", "batch_occupancy"),
-    "serving_jax": ("short_waits", "active_transients", "batch_occupancy"),
+    "serving_jax": ("short_waits", "active_transients", "batch_occupancy",
+                    "event_counts"),
 }
+
+#: keys ``meta["obs"]`` must carry on a serving_jax result (the
+#: ``serving_jax.last_run_obs`` snapshot: jit-cache counters plus the
+#: compile/steady wall-time split)
+_OBS_KEYS = ("jit_cache", "compile", "steady")
 
 
 def validate_run_result(rr: "RunResult") -> list:
@@ -93,6 +99,17 @@ def validate_run_result(rr: "RunResult") -> list:
         problems.append("sim_seed (engine provenance) not set")
     if not rr.config:
         problems.append("resolved config missing")
+    if rr.wall_time_s < 0:
+        problems.append(f"negative wall_time_s {rr.wall_time_s}")
+    if rr.engine == "serving_jax":
+        if "fleet_spec" not in rr.meta:
+            problems.append("serving_jax result without meta['fleet_spec'] "
+                            "provenance")
+        obs = rr.meta.get("obs")
+        if not isinstance(obs, dict) or \
+                any(k not in obs for k in _OBS_KEYS):
+            problems.append("serving_jax result without meta['obs'] "
+                            f"telemetry (need keys {list(_OBS_KEYS)})")
     return problems
 
 
@@ -347,9 +364,15 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
                        overrides: Optional[Dict] = None, quick: bool = False,
                        seed: Optional[int] = None,
                        sim_seed: Optional[int] = None,
-                       wall_time_s: float = 0.0, trace=None) -> RunResult:
+                       wall_time_s: float = 0.0, trace=None,
+                       recorder=None) -> RunResult:
     """Serving adapter: a finished ``ElasticServingFleet`` run over its
     ``Request`` stream -> ``RunResult``.
+
+    ``recorder`` (the ``repro.obs.EventRecorder`` the fleet ran with, if
+    any) lands as a per-tick ``event_counts`` series plus per-type totals
+    under ``meta["obs"]["events"]`` — the same shape ``serving_jax`` emits,
+    so persisted results diff across engines.
 
     Canonical names map per-request queueing waits (ticks -> seconds via
     ``config.tick_s``) onto the DES's task-wait metrics through the shared
@@ -399,6 +422,9 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
     }
     cfg = asdict(config) if is_dataclass(config) else dict(config or {})
     meta = {"workload": _jsonable(wl_meta)}
+    if recorder is not None:
+        series["event_counts"] = recorder.counts(fleet._ticks).astype(float)
+        meta["obs"] = {"events": recorder.type_counts()}
     if trace is not None:
         meta["trace"] = _trace_meta(trace)
     return RunResult(
@@ -414,9 +440,15 @@ def from_serving_jax(metrics: Dict[str, float], series: Dict, *,
                      overrides: Optional[Dict] = None, quick: bool = False,
                      seed: Optional[int] = None,
                      sim_seed: Optional[int] = None,
-                     wall_time_s: float = 0.0, trace=None) -> RunResult:
+                     wall_time_s: float = 0.0, trace=None,
+                     obs: Optional[Dict] = None) -> RunResult:
     """Serving-JAX adapter: ``repro.runtime.serving_jax.run_workload``
     output -> ``RunResult``.
+
+    ``obs`` is the ``serving_jax.last_run_obs()`` snapshot (jit-cache
+    hit/miss counters, compile-vs-steady wall-time split), stored under
+    ``meta["obs"]`` — ``validate_run_result`` requires it on serving_jax
+    results.
 
     ``run_workload`` already emits the canonical metric names and the
     ``from_serving_fleet`` series (its ``summarize`` goes through the same
@@ -434,6 +466,8 @@ def from_serving_jax(metrics: Dict[str, float], series: Dict, *,
     meta = {"workload": _jsonable(wl_meta)}
     if spec is not None:
         meta["fleet_spec"] = _jsonable(spec)
+    if obs is not None:
+        meta["obs"] = _jsonable(obs)
     if trace is not None:
         meta["trace"] = _trace_meta(trace)
     return RunResult(

@@ -181,7 +181,7 @@ def _run_des(sc: Scenario, *, quick: bool, seed: int, sim_seed: int, trace,
              trace_overrides: Dict, sim_overrides: Dict) -> RunResult:
     """Exact discrete-event engine (``repro.core.engine``); the underlying
     run is byte-identical to the legacy ``Scenario.run()`` path."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     if trace is None:
         trace = sc.trace(quick=quick, seed=seed,
                          trace_overrides=trace_overrides)
@@ -190,7 +190,7 @@ def _run_des(sc: Scenario, *, quick: bool, seed: int, sim_seed: int, trace,
     return from_sim_result(
         res, scenario=sc.name, quick=quick, seed=seed, sim_seed=sim_seed,
         overrides={"trace": trace_overrides, "sim": sim_overrides},
-        wall_time_s=time.time() - t0, trace=trace)
+        wall_time_s=time.perf_counter() - t0, trace=trace)
 
 
 def _run_fluid(sc: Scenario, *, quick: bool, seed: int, sim_seed: int = 0,
@@ -200,7 +200,7 @@ def _run_fluid(sc: Scenario, *, quick: bool, seed: int, sim_seed: int = 0,
     overrides the scenario's ``FluidPolicyParams`` (calibration fits)."""
     from repro.core.simjax import simulate_fluid
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if trace is None:
         trace = sc.trace(quick=quick, seed=seed,
                          trace_overrides=trace_overrides)
@@ -211,21 +211,25 @@ def _run_fluid(sc: Scenario, *, quick: bool, seed: int, sim_seed: int = 0,
     return from_fluid_output(
         out, scenario=sc.name, fluid_config=fcfg, controller=ctrl, policy=pol,
         overrides={"trace": trace_overrides, "sim": sim_overrides},
-        quick=quick, seed=seed, wall_time_s=time.time() - t0, trace=trace)
+        quick=quick, seed=seed, wall_time_s=time.perf_counter() - t0, trace=trace)
 
 
 def _run_serving(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
                  trace, trace_overrides: Dict, sim_overrides: Dict,
-                 decode_fn=None) -> RunResult:
+                 decode_fn=None, record_events: bool = False,
+                 tracer=None) -> RunResult:
     """Pod-level serving engine (``repro.runtime.serving``): the scenario's
     trace becomes a decode-request stream + long-job pinning signal, routed
     by the scenario's short-placement policy over an ``ElasticServingFleet``.
     ``decode_fn`` optionally runs a real jitted model decode step per tick
-    (examples/serve_bursty.py)."""
+    (examples/serve_bursty.py).  ``record_events=True`` captures the typed
+    scheduler event stream into the result (``series["event_counts"]`` +
+    event totals under ``meta["obs"]``); ``tracer`` (an ``obs.Tracer``)
+    collects the Perfetto timeline — both off by default (zero cost)."""
     from repro.runtime.serving import (ElasticServingFleet,
                                        build_serving_workload)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if trace is None:
         trace = sc.trace(quick=quick, seed=seed,
                          trace_overrides=trace_overrides)
@@ -233,15 +237,22 @@ def _run_serving(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
     requests, pinned_fn, max_ticks, wl_meta = build_serving_workload(trace,
                                                                      cfg)
     _, short_pol = sc.policies()
+    recorder = None
+    if record_events:
+        from repro.obs import EventRecorder
+
+        recorder = EventRecorder()
     fleet = ElasticServingFleet.from_config(
         cfg, short_policy=short_pol, decode_fn=decode_fn, seed=sim_seed,
-        drain_preference=sc.drain_preference)
+        drain_preference=sc.drain_preference, recorder=recorder,
+        tracer=tracer)
     fleet.run(requests, pinned_fn, max_ticks)
     return from_serving_fleet(
         fleet, requests, scenario=sc.name, config=cfg, workload_meta=wl_meta,
         overrides={"trace": trace_overrides, "sim": sim_overrides},
         quick=quick, seed=seed, sim_seed=sim_seed,
-        wall_time_s=time.time() - t0, trace=trace)
+        wall_time_s=time.perf_counter() - t0, trace=trace,
+        recorder=recorder)
 
 
 def _serving_jax_setup(sc: Scenario, *, quick: bool, seed: int, trace,
@@ -271,7 +282,7 @@ def _run_serving_jax(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
     deterministic pinned-occupancy path), not draw-for-draw."""
     from repro.runtime import serving_jax
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     trace, cfg, requests, max_ticks, wl_meta, spot = _serving_jax_setup(
         sc, quick=quick, seed=seed, trace=trace,
         trace_overrides=trace_overrides, sim_overrides=sim_overrides)
@@ -284,7 +295,8 @@ def _run_serving_jax(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
         workload_meta=wl_meta,
         overrides={"trace": trace_overrides, "sim": sim_overrides},
         quick=quick, seed=seed, sim_seed=sim_seed,
-        wall_time_s=time.time() - t0, trace=trace)
+        wall_time_s=time.perf_counter() - t0, trace=trace,
+        obs=serving_jax.last_run_obs())
 
 
 register_engine("des", _run_des)
@@ -448,7 +460,7 @@ def _sweep_fluid(sc: Scenario, grid: Dict[str, Sequence], *, quick: bool,
                  policy=None) -> SweepResult:
     from repro.core import simjax
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     unknown = set(grid) - set(_FLUID_AXES)
     if unknown:
         raise ValueError(f"fluid sweep axes must be among {_FLUID_AXES}; "
@@ -487,7 +499,7 @@ def _sweep_fluid(sc: Scenario, grid: Dict[str, Sequence], *, quick: bool,
         engine="fluid", scenario=sc.name, axes=axes, metrics=metrics,
         meta={"quick": quick, "seed": seed, "dt": dt,
               "n_points": int(np.prod([len(v) for v in axes.values()])),
-              "wall_time_s": time.time() - t0})
+              "wall_time_s": time.perf_counter() - t0})
 
 
 #: sweep axes the serving_jax cube evaluates as one device program; any
@@ -510,7 +522,7 @@ def _sweep_serving_jax(sc: Scenario, grid: Dict[str, Sequence], *,
     dropped from the result dims, mirroring the fluid sweep."""
     from repro.runtime import serving_jax
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     trace, cfg, requests, max_ticks, wl_meta, spot = _serving_jax_setup(
         sc, quick=quick, seed=seed, trace=trace,
         trace_overrides=dict(trace_overrides or {}),
@@ -544,8 +556,9 @@ def _sweep_serving_jax(sc: Scenario, grid: Dict[str, Sequence], *,
         engine="serving_jax", scenario=sc.name, axes=axes, metrics=metrics,
         meta={"quick": quick, "seed": seed, "sim_seeds": list(seeds),
               "batch": batch, "fleet_spec": _jsonable(spec),
+              "obs": _jsonable(serving_jax.last_run_obs()),
               "n_points": int(np.prod([len(v) for v in axes.values()])),
-              "wall_time_s": time.time() - t0})
+              "wall_time_s": time.perf_counter() - t0})
 
 
 def _axis_overrides(grid_names: Sequence[str]) -> None:
@@ -579,7 +592,7 @@ def _sweep_pointwise(sc: Scenario, grid: Dict[str, Sequence], engine: str, *,
                      sim_overrides: Optional[Dict],
                      processes: Optional[int] = None,
                      **engine_kwargs) -> SweepResult:
-    t0 = time.time()
+    t0 = time.perf_counter()
     _axis_overrides(list(grid))
     if trace is None:
         trace = sc.trace(quick=quick, seed=seed,
@@ -610,4 +623,4 @@ def _sweep_pointwise(sc: Scenario, grid: Dict[str, Sequence], engine: str, *,
         meta={"quick": quick, "seed": seed, "sim_seed": sim_seed,
               "n_points": len(points),
               "processes": int(processes or 1),
-              "wall_time_s": time.time() - t0})
+              "wall_time_s": time.perf_counter() - t0})

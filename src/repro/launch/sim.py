@@ -53,6 +53,11 @@ def main():
     ap.add_argument("--out", default=None, metavar="FILE",
                     help="persist the full RunResult (series included) "
                          "as npz, or JSON with a .json suffix")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome trace-event JSON timeline "
+                         "(open in ui.perfetto.dev); the serving engine "
+                         "records live spans, other engines reconstruct "
+                         "counter tracks from the RunResult series")
     args = ap.parse_args()
 
     if args.list:
@@ -78,11 +83,27 @@ def main():
     print(f"scenario: {sc.name} | trace: jobs={tr.n_jobs} tasks={tr.n_tasks} "
           f"util={tr.meta['utilization']:.3f}")
     engine = args.engine or ("fluid" if args.fluid else "des")
+    engine_kwargs = {}
+    tracer = None
+    if args.trace_out and engine == "serving":
+        from repro.obs import Tracer
+
+        cfg = sc.serving_config(quick=args.quick, sim_overrides=sim_over)
+        tracer = Tracer(tick_s=cfg.tick_s)
+        engine_kwargs = dict(tracer=tracer, record_events=True)
     res = exp_run(sc, engine=engine,
                   quick=args.quick, seed=args.seed, sim_seed=args.seed,
                   trace=tr, trace_overrides=trace_over,
-                  sim_overrides=sim_over)
+                  sim_overrides=sim_over, **engine_kwargs)
     print(json.dumps(res.metrics, indent=1, default=float))
+    if args.trace_out:
+        if tracer is not None:
+            path = tracer.export(args.trace_out)
+        else:
+            from repro.obs import trace_from_run_result
+
+            path = trace_from_run_result(res, args.trace_out)
+        print(f"trace written to {path}", file=sys.stderr)
     if args.out:
         path = res.save(args.out)
         print(f"RunResult saved to {path}", file=sys.stderr)

@@ -9,9 +9,12 @@ persists one ``<scenario>-<engine>.runresult.npz``; the driver then
 *re-loads* every persisted RunResult in the output directory and validates
 the schema (``repro.exp.validate_run_result``: canonical metric names
 present and finite, the engine's required series non-empty, seed/engine
-provenance set) and prints a pass/fail summary table. The exit code is
-nonzero on any schema violation — not just on crashes — so CI gates on the
-RunResult contract itself.
+provenance set) and prints a pass/fail summary table — failures first,
+then a slowest-5 wall-time digest. A machine-readable
+``smoke_summary.json`` (per-job wall times, crash and schema-violation
+counts) lands next to the RunResults for CI artifact upload. The exit
+code is nonzero on any schema violation — not just on crashes — so CI
+gates on the RunResult contract itself.
 
   PYTHONPATH=src python -m repro.launch.smoke --quick
   PYTHONPATH=src python -m repro.launch.smoke --quick --processes 4 \
@@ -23,6 +26,7 @@ RunResult contract itself.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import pathlib
 import sys
@@ -59,7 +63,7 @@ def _run_one(payload) -> Dict:
     the process pool can pickle it); never raises — a crash comes back as a
     row the summary table reports and the exit code fails on."""
     name, engine, quick, seed, out_dir = payload
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         from repro import exp
 
@@ -68,10 +72,10 @@ def _run_one(payload) -> Dict:
         path = pathlib.Path(out_dir) / f"{name}-{engine}.runresult.npz"
         rr.save(path)
         return {"scenario": name, "engine": engine, "path": str(path),
-                "seconds": time.time() - t0, "error": None}
+                "seconds": time.perf_counter() - t0, "error": None}
     except Exception as e:
         return {"scenario": name, "engine": engine, "path": None,
-                "seconds": time.time() - t0,
+                "seconds": time.perf_counter() - t0,
                 "error": f"{type(e).__name__}: {e}"}
 
 
@@ -134,17 +138,25 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     out_dir = pathlib.Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
     n_crashed = 0
+    results: List[Dict] = []
     if not args.validate_only:
         procs = args.processes or os.cpu_count() or 1
         results = run_catalog(out_dir, quick=args.quick, seed=args.seed,
                               processes=procs, names=args.scenario)
         print(f"ran {len(results)} (scenario x engine) jobs "
               f"across {procs} processes")
-        for r in results:
+        # failures first, then by wall time — the broken row is the one the
+        # CI log reader is scanning for
+        for r in sorted(results, key=lambda r: (r["error"] is None,
+                                                -r["seconds"])):
             status = "ok" if r["error"] is None else f"CRASH {r['error']}"
             print(f"  {r['scenario']:28s} {r['engine']:8s} "
                   f"{r['seconds']:6.1f}s  {status}")
         n_crashed = sum(r["error"] is not None for r in results)
+        slowest = sorted(results, key=lambda r: -r["seconds"])[:5]
+        print("slowest jobs:")
+        for r in slowest:
+            print(f"  {r['seconds']:6.1f}s  {r['scenario']}/{r['engine']}")
 
     rows = validate_dir(out_dir)
     print(f"\nvalidating {len(rows)} persisted RunResults in {out_dir}")
@@ -158,6 +170,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         else:
             print(f"  {row['path']:44s} pass "
                   f"({row['scenario']}/{row['engine']})")
+
+    summary = {
+        "jobs": results,
+        "n_jobs": len(results),
+        "n_crashed": n_crashed,
+        "validation": rows,
+        "n_validated": len(rows),
+        "n_schema_invalid": n_bad,
+        "total_run_seconds": sum(r["seconds"] for r in results),
+        "validate_only": bool(args.validate_only),
+    }
+    summary_path = out_dir / "smoke_summary.json"
+    summary_path.write_text(json.dumps(summary, indent=1))
+    print(f"summary written to {summary_path}")
 
     if not rows:
         print("FAIL: no RunResults found to validate")

@@ -51,8 +51,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import events as ev
 from repro.runtime.batching import SlotState
-from repro.sched.controller import ControllerSpec, FleetView, select_drain
+from repro.sched.controller import (ControllerSpec, FleetView, record_rent,
+                                    select_drain)
 from repro.sched.policy import EagleProbing, ShortPlacementPolicy
 
 
@@ -114,6 +116,7 @@ class _SlotDecode:
 
     req: Request
     tokens_left: int
+    admit_t: int = 0  # tick the request entered this slot (trace spans)
 
 
 @dataclass
@@ -265,9 +268,14 @@ class ElasticServingFleet:
                  revocation_mttf_ticks: float = 0.0, seed: int = 0,
                  spec: Optional[ControllerSpec] = None,
                  short_policy: Optional[ShortPlacementPolicy] = None,
-                 probe_d: int = 2, probe_retries: int = 3):
+                 probe_d: int = 2, probe_retries: int = 3,
+                 recorder=None, tracer=None):
         self.spec = spec or ControllerSpec(threshold, max_transient,
                                            provisioning_delay)
+        #: optional obs.EventRecorder / obs.Tracer — None keeps every
+        #: emission site a single attribute check (zero-cost when off)
+        self.recorder = recorder
+        self.tracer = tracer
         self.provisioning_delay = int(self.spec.provisioning_delay)
         self.hedge_factor = hedge_factor
         self.max_slots = int(max_slots)
@@ -302,13 +310,17 @@ class ElasticServingFleet:
         for r in self.replicas:
             self._view.register(r)
         self.short_policy = (short_policy or EagleProbing()).bind(self._view)
+        if self.tracer is not None:
+            self.tracer.process_name(0, "fleet")
+            for r in self.replicas:
+                self.tracer.thread_name(0, r.rid, f"ondemand-{r.rid}")
 
     @classmethod
     def from_config(cls, cfg: ServingFleetConfig, *,
                     short_policy: Optional[ShortPlacementPolicy] = None,
                     decode_fn: Optional[Callable] = None, seed: int = 0,
-                    drain_preference: str = "least_loaded"
-                    ) -> "ElasticServingFleet":
+                    drain_preference: str = "least_loaded",
+                    recorder=None, tracer=None) -> "ElasticServingFleet":
         spec = ControllerSpec(cfg.threshold, cfg.max_transient,
                               cfg.ticks(cfg.provisioning_delay),
                               drain_preference)
@@ -318,7 +330,8 @@ class ElasticServingFleet:
                    decode_fn=decode_fn,
                    revocation_mttf_ticks=mttf, seed=seed, spec=spec,
                    short_policy=short_policy, probe_d=cfg.probe_d,
-                   probe_retries=cfg.probe_retries)
+                   probe_retries=cfg.probe_retries,
+                   recorder=recorder, tracer=tracer)
 
     # ------------------------------------------------------------- internals
 
@@ -353,6 +366,12 @@ class ElasticServingFleet:
         self.replicas.append(nr)
         self._by_rid[nr.rid] = nr
         self._view.register(nr)
+        if self.recorder is not None:
+            self.recorder.emit(t, ev.PROVISION, replica=nr.rid)
+        if self.tracer is not None:
+            self.tracer.thread_name(0, nr.rid, f"transient-{nr.rid}")
+            self.tracer.async_begin("transient", t, aid=nr.rid,
+                                    cat="transient", tid=nr.rid)
         return nr
 
     def _apply_pinning(self, want: int, t: int):
@@ -381,8 +400,14 @@ class ElasticServingFleet:
             displaced = residents + list(r.queue)
             r.queue.clear()
             r.pending_ticks = 0
-            for req in displaced:
+            for i, req in enumerate(displaced):
                 if not self._finished(req):
+                    if self.recorder is not None:
+                        if i < len(residents):
+                            self.recorder.emit(t, ev.DISPLACE,
+                                               replica=r.rid, rid=req.rid)
+                        self.recorder.emit(t, ev.REROUTE, replica=r.rid,
+                                           rid=req.rid)
                     self._route(req, t)
 
     def _controller_tick(self, t: int):
@@ -397,6 +422,7 @@ class ElasticServingFleet:
             n_active_transient=len(self._transients()),
         )
         delta = self.spec.desired_delta(view)
+        record_rent(self.recorder, t, delta)
         for _ in range(max(delta, 0)):
             self.pending_online.append(t + self.provisioning_delay)
         for _ in range(max(-delta, 0)):
@@ -432,7 +458,9 @@ class ElasticServingFleet:
             if prim.start is None:
                 prim.start = t
             # pending_ticks already counts the admitted request
-            r.slots.admit(_SlotDecode(req, req.gen_len))
+            r.slots.admit(_SlotDecode(req, req.gen_len, t))
+            if self.recorder is not None:
+                self.recorder.emit(t, ev.ADMIT, replica=r.rid, rid=req.rid)
         decoding = r.slots.items()
         if decoding:
             if self.decode_fn is not None:
@@ -444,10 +472,23 @@ class ElasticServingFleet:
                     prim = self._primary_of(d.req)
                     if prim.finish is None:  # first completion wins
                         prim.finish = t + 1
+                        if prim.hedged and self.recorder is not None:
+                            self.recorder.emit(t, ev.HEDGE_WIN,
+                                               replica=r.rid, rid=prim.rid)
+                    if self.tracer is not None:
+                        self.tracer.complete(
+                            f"req {d.req.rid}", d.admit_t, t + 1 - d.admit_t,
+                            tid=r.rid, args={"gen_len": d.req.gen_len})
                     r.slots.release(slot)
         if r.draining and not r.slots.n_active and not r.queue:
             r.offline_at = t
             self.lifetimes.append(t - r.online_at)
+            if self.recorder is not None:
+                self.recorder.emit(t, ev.DRAIN, replica=r.rid)
+            if self.tracer is not None:
+                self.tracer.async_end("transient", t, aid=r.rid,
+                                      cat="transient", tid=r.rid,
+                                      args={"end": "drain"})
         return len(decoding)
 
     def _maybe_hedge(self, t: int):
@@ -471,7 +512,18 @@ class ElasticServingFleet:
                     copy = Request(req.rid, req.arrival, req.gen_len,
                                    hedged=True, job_id=req.job_id,
                                    primary=req)
-                    min(reserve, key=lambda x: x.load).enqueue(copy, t)
+                    target = min(reserve, key=lambda x: x.load)
+                    target.enqueue(copy, t)
+                    if self.recorder is not None:
+                        self.recorder.emit(t, ev.HEDGE, replica=target.rid,
+                                           rid=req.rid)
+                    if self.tracer is not None:
+                        # flow arrow from the stuck primary's transient
+                        # lane to the on-demand reserve lane it hedged onto
+                        self.tracer.flow_start("hedge", t,
+                                               fid=self.n_hedges, tid=r.rid)
+                        self.tracer.flow_end("hedge", t, fid=self.n_hedges,
+                                             tid=target.rid)
 
     def _maybe_revoke(self, t: int):
         if self.revocation_mttf <= 0:
@@ -481,17 +533,30 @@ class ElasticServingFleet:
                 self.n_revocations += 1
                 r.offline_at = t
                 self.lifetimes.append(t - r.online_at)
+                if self.recorder is not None:
+                    self.recorder.emit(t, ev.REVOKE, replica=r.rid)
+                if self.tracer is not None:
+                    self.tracer.async_end("transient", t, aid=r.rid,
+                                          cat="transient", tid=r.rid,
+                                          args={"end": "revoke"})
+                n_q = len(r.queue)
                 requeue = list(r.queue) + [d.req for _, d in r.slots.items()]
                 r.queue.clear()
                 r.slots.clear()
                 r.pending_ticks = 0
-                for req in requeue:
+                for i, req in enumerate(requeue):
                     if self._finished(req):
                         continue
                     if req.hedged and req.primary is None:
                         continue  # the on-demand copy carries it (§3.3)
                     if req.primary is None:
                         req.start = None  # restarts from scratch elsewhere
+                    if self.recorder is not None:
+                        if i >= n_q:  # slot resident, not a queued entry
+                            self.recorder.emit(t, ev.DISPLACE,
+                                               replica=r.rid, rid=req.rid)
+                        self.recorder.emit(t, ev.REROUTE, replica=r.rid,
+                                           rid=req.rid)
                     self._route(req, t)
 
     # ------------------------------------------------------------------ run
@@ -533,6 +598,11 @@ class ElasticServingFleet:
         self._active_area += online
         self.peak_active = max(self.peak_active, online)
         self.transient_counts.append(online)
+        if self.tracer is not None:
+            self.tracer.counter("queue_depth", t, sum(
+                len(r.queue) for r in self.replicas
+                if r.offline_at is None))
+            self.tracer.counter("online_transients", t, online)
         self._ticks += 1
 
     def run(self, requests: List[Request], pinned_fn: Callable[[int], int],

@@ -49,6 +49,7 @@ oracle exactly; ``tests/test_serving_jax.py`` pins that bit-for-bit.
 from __future__ import annotations
 
 import math
+import time
 from collections import namedtuple
 from dataclasses import dataclass
 from functools import partial
@@ -275,6 +276,8 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         disp = newly[:, None] & (slot_rid >= 0)
         d_rid = jnp.where(disp, slot_rid, 0)
         d_live = disp & (finish[d_rid] < 0)
+        # obs: slot residents evicted by a pin transition (DISPLACE column)
+        ev_disp_pin = jnp.sum(d_live)
         # no live copy elsewhere -> full restart (start resets)
         reset = d_live & ~hedged[d_rid]
         start = start.at[jnp.where(reset, d_rid, N)].set(-1, mode="drop")
@@ -337,7 +340,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
 
         def do_route(op):
             (q_rid, q_head, q_len, pend, routed_at, n_over, ring, rr_head,
-             rr_len) = op
+             rr_len, ev_rr) = op
             offs = jnp.arange(W)
             rr_val = offs < jnp.minimum(rr_len, W)
             rr_rid = ring[(rr_head + offs) % RC]
@@ -356,6 +359,9 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
             n_e = n_popped + arr_count[t]
             # ring entries whose rid already finished are stale hedge losers
             e_val = (jnp.arange(W2) < n_e) & (finish[e_rid] < 0)
+            # obs: live ring pops are re-routes of displaced/revoked work
+            # (fresh arrivals — entries past n_popped — are not REROUTEs)
+            ev_rr = ev_rr + jnp.sum((jnp.arange(W2) < n_popped) & e_val)
             act_rank = jnp.cumsum(act_tr) - 1
             act_list = jnp.zeros(K_cap, jnp.int32).at[
                 jnp.where(act_tr, act_rank, K_cap)].set(idx_r, mode="drop")
@@ -423,13 +429,13 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
                                n_over), chosen, e_rid, e_val, t)
             q_rid, q_head, q_len, pend, routed_at, n_over = st
             return (q_rid, q_head, q_len, pend, routed_at, n_over, ring,
-                    rr_head, rr_len)
+                    rr_head, rr_len, ev_rr)
 
         (q_rid, q_head, q_len, pend, routed_at, n_over, ring, rr_head,
-         rr_len) = jax.lax.cond(
+         rr_len, ev_reroute) = jax.lax.cond(
             (rr_len > 0) | (arr_count[t] > 0), do_route, lambda op: op,
             (q_rid, q_head, q_len, pend, routed_at, n_over, ring, rr_head,
-             rr_len))
+             rr_len, jnp.int32(0)))
 
         # ---- 5 · §3.2 controller: exact leading-true counts over a [0, K]
         # candidate vector (same float comparisons as the Python unit loop)
@@ -461,6 +467,15 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         # the queue ghost-flushes through phase 2
         u = jax.random.uniform(jax.random.fold_in(tk, 3), (R,))
         revoked = online & is_tr & ~draining & (u < rev_p)
+        # obs: revocation counts from the pre-revoke state (do_revoke only
+        # fires on revocation ticks; these reduce to 0 on the common tick).
+        # DISPLACE = residents the revocation sends back through routing:
+        # still alive and not hedged (the on-demand copy carries those)
+        ev_revoke = jnp.sum(revoked)
+        v_pre = revoked[:, None] & (slot_rid >= 0)
+        v_rid_pre = jnp.where(v_pre, slot_rid, 0)
+        ev_disp_rev = jnp.sum(v_pre & (finish[v_rid_pre] < 0)
+                              & ~hedged[v_rid_pre])
 
         def do_revoke(op):
             (start, ring, rr_len, pend, slot_rid, slot_rem, lt_buf, lt_sum,
@@ -499,6 +514,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         act_tr = online & is_tr & ~draining
         reserve = is_ond & ~pinned
         n_res = jnp.sum(reserve)
+        n_hedges_pre = n_hedges  # obs: HEDGE column is the per-tick delta
 
         def do_hedge(op):
             (q_rid, q_head, q_len, pend, routed_at, n_over, hedged,
@@ -558,7 +574,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
 
         def do_admit(op):
             (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-             n_hcancel) = op
+             n_hcancel, ev_ad) = op
             w_rid, w_val = q_window(q_rid, q_head, q_len, P)
             w_val = w_val & act[:, None]
             w_rid = jnp.where(w_val, w_rid, 0)
@@ -584,6 +600,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
             hit = (admit[:, None, :] & free_mask[:, :, None]
                    & (live_cum[:, None, :] == free_rank[:, :, None]))
             has = jnp.any(hit, axis=2)
+            ev_ad = ev_ad + jnp.sum(has)  # obs: slot admissions this tick
             eidx = jnp.argmax(hit, axis=2)
             a_rid = jnp.take_along_axis(w_rid, eidx, axis=1)
             slot_rid = jnp.where(has, a_rid, slot_rid)
@@ -594,13 +611,13 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
             q_head = (q_head + consumed) % Q
             q_len = q_len - consumed
             return (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-                    n_hcancel)
+                    n_hcancel, ev_ad)
 
         (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-         n_hcancel) = jax.lax.cond(
+         n_hcancel, ev_admit) = jax.lax.cond(
             jnp.any(act & (q_len > 0)), do_admit, lambda op: op,
             (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-             n_hcancel))
+             n_hcancel, jnp.int32(0)))
 
         occ = (slot_rid >= 0) & act[:, None]
         busy_r = jnp.sum(occ, axis=1)
@@ -609,6 +626,9 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         fin = occ & (slot_rem <= 0)
         f_rid2 = jnp.where(fin, slot_rid, 0)
         fg = finish[f_rid2]
+        # obs: first completion of a hedged pair (hedged is post-phase-7,
+        # matching the oracle's check at the moment finish is stamped)
+        ev_hedge_win = jnp.sum(fin & (fg < 0) & hedged[f_rid2])
         finish = finish.at[jnp.where(fin, f_rid2, N)].set(
             jnp.where(fg < 0, t + 1, fg), mode="drop")
         slot_rid = jnp.where(fin, -1, slot_rid)
@@ -634,6 +654,22 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         draining = draining & ~done_drain
 
         online_tr = jnp.sum(online & is_tr)
+        # per-tick event-count vector, columns in obs.events.EVENT_TYPES
+        # order — the post-hoc event log events_from_counts decodes
+        ev_counts = jnp.stack([
+            add,                          # RENT
+            n_on,                         # PROVISION
+            jnp.sum(done_drain),          # DRAIN
+            ev_revoke,                    # REVOKE
+            n_hedges - n_hedges_pre,      # HEDGE
+            ev_hedge_win,                 # HEDGE_WIN
+            ev_admit,                     # ADMIT
+            ev_disp_pin + ev_disp_rev,    # DISPLACE
+            ev_reroute,                   # REROUTE
+        ]).astype(jnp.int32)
+        # fleet queue depth at end of tick (online replicas only — matches
+        # the oracle's tracer counter over replicas with offline_at None)
+        qdepth = jnp.sum(jnp.where(online, q_len, 0))
         import os
         if os.environ.get("SJX_DEBUG"):  # pragma: no cover
             jax.debug.print(
@@ -644,7 +680,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
                  pend, slot_rid, slot_rem, start, finish, hedged, routed_at,
                  pipe, ring, rr_head, rr_len, want, n_hedges, n_hcancel,
                  n_revoke, n_rentals, n_over, lt_buf, lt_count, lt_sum)
-        ys = (online_tr, busy, cap, tr_busy, tr_cap)
+        ys = (online_tr, busy, cap, tr_busy, tr_cap, ev_counts, qdepth)
         return carry, ys
 
     i32 = jnp.int32
@@ -677,11 +713,12 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
      slot_rid, slot_rem, start, finish, hedged, routed_at, pipe, ring,
      rr_head, rr_len, want_prev, n_hedges, n_hcancel, n_revoke, n_rentals,
      n_over, lt_buf, lt_count, lt_sum) = carry
-    online_tr, busy, cap, tr_busy, tr_cap = ys
+    online_tr, busy, cap, tr_busy, tr_cap, ev_counts, qdepth = ys
     return {
         "start": start, "finish": finish, "hedged": hedged,
         "active_transients": online_tr, "busy": busy, "cap": cap,
         "tr_busy": tr_busy, "tr_cap": tr_cap,
+        "event_counts": ev_counts, "queue_depth": qdepth,
         "n_hedges": n_hedges, "n_hedge_cancelled": n_hcancel,
         "n_revocations": n_revoke, "n_rentals": n_rentals,
         "n_overflow": n_over, "lifetimes": lt_buf,
@@ -750,6 +787,42 @@ def cache_clear() -> None:
     _CACHE_STATS.update(hits=0, misses=0)
 
 
+# ------------------------------------------------ run-level observability
+
+#: facts about the most recent run_workload / sweep_cube execution
+_LAST_OBS: Dict[str, object] = {}
+
+
+def _record_exec(phase: str, exec_s: float, **extra) -> None:
+    from repro.obs.metrics import REGISTRY
+
+    REGISTRY.counter("serving_jax.jit_cache_"
+                     + ("miss" if phase == "compile" else "hit")).inc()
+    REGISTRY.histogram(f"serving_jax.{phase}_exec_s").observe(exec_s)
+    _LAST_OBS.clear()
+    _LAST_OBS.update(phase=phase, exec_s=exec_s,
+                     program_cache_hit=phase != "compile", **extra)
+
+
+def last_run_obs() -> Dict[str, object]:
+    """Observability snapshot for ``RunResult.meta["obs"]``: the most
+    recent execution's phase (``compile`` when :func:`get_program` missed
+    the program cache and the call paid tracing+XLA, ``steady`` on a cache
+    hit) and wall time, plus process-cumulative jit-cache counters and
+    compile/steady wall-time histograms — the ``serving_scale`` split, as
+    a free by-product of every serving_jax run."""
+    from repro.obs.metrics import REGISTRY, Histogram
+
+    hists = REGISTRY.snapshot()["histograms"]
+    empty = Histogram("").snapshot()
+    return {
+        **_LAST_OBS,
+        "jit_cache": cache_info()._asdict(),
+        "compile": hists.get("serving_jax.compile_exec_s", empty),
+        "steady": hists.get("serving_jax.steady_exec_s", empty),
+    }
+
+
 # ------------------------------------------------------------- host wrappers
 
 def _seed_key(seed: int):
@@ -811,6 +884,10 @@ def summarize(spec: FleetSpec, out: Dict, consts: Dict, tick_s: float
         "transient_lifetimes": lifetimes.astype(float) * tick_s,
         "batch_occupancy": np.divide(busy, cap, out=np.zeros_like(busy),
                                      where=cap > 0),
+        # per-tick scheduler event counts (obs.events.EVENT_TYPES columns)
+        # and end-of-tick fleet queue depth — the flight-recorder series
+        "event_counts": np.asarray(out["event_counts"], np.int64),
+        "queue_depth": np.asarray(out["queue_depth"], float),
     }
     return metrics, series
 
@@ -836,9 +913,14 @@ def run_workload(cfg: ServingFleetConfig, requests: Sequence[Request],
                          spot_pricing=spot_pricing)
     consts = build_consts(spec, requests, pinned_per_tick)
     params = make_params(cfg)
+    info0 = cache_info()
     fn = get_program(spec)
+    fresh = cache_info().misses > info0.misses
+    t0 = time.perf_counter()
     out = fn(params, consts, _seed_key(sim_seed))
-    out = {k: np.asarray(v) for k, v in out.items()}
+    out = {k: np.asarray(v) for k, v in out.items()}  # forces device work
+    _record_exec("compile" if fresh else "steady",
+                 time.perf_counter() - t0)
     metrics, series = summarize(spec, out, consts, cfg.tick_s)
     return metrics, series, spec
 
@@ -890,9 +972,15 @@ def sweep_cube(cfg: ServingFleetConfig, requests: Sequence[Request],
     import jax
 
     keys = jax.vmap(_seed_key)(g_seed.astype(np.uint32))
+    info0 = cache_info()
     fn = get_program(spec, batch=batch)
+    fresh = cache_info().misses > info0.misses
+    t0 = time.perf_counter()
     out = fn(params, consts, keys)
     out = {k: np.asarray(v) for k, v in out.items()}
+    _record_exec("compile" if fresh else "steady",
+                 time.perf_counter() - t0, batch=batch,
+                 n_points=len(grid))
     shape = (len(seeds), len(thr), len(ks), len(ms))
     per_point: List[Dict[str, float]] = []
     for i in range(len(grid)):

@@ -100,6 +100,22 @@ def desired_delta(view: FleetView, cfg: ControllerSpec) -> int:
     return -rem
 
 
+def record_rent(recorder, t, delta: int) -> None:
+    """Emit one RENT event per transient the §3.2 loop just requested.
+
+    Both discrete engines call this right after :func:`desired_delta`, so
+    the rent decision is evented at the controller layer — engine-specific
+    code only events what the controller can't see (provision arrival,
+    drain completion, revocation). No-op when ``recorder`` is None or the
+    controller asked for a drain (``delta <= 0``)."""
+    if recorder is None or delta <= 0:
+        return
+    from repro.obs.events import RENT
+
+    for _ in range(delta):
+        recorder.emit(t, RENT)
+
+
 def select_drain(candidates, *, preference: str = "least_loaded",
                  load_key, online_key):
     """Pick which transient to drain next.

@@ -100,11 +100,12 @@ class Scenario:
 
     def run(self, *, quick: bool = False, seed: int = 42, sim_seed: int = 0,
             trace=None, trace_overrides: Optional[Dict] = None,
-            sim_overrides: Optional[Dict] = None):
+            sim_overrides: Optional[Dict] = None, recorder=None):
         """Run the DES for this scenario; returns ``SimResult``.
 
         ``trace`` short-circuits trace synthesis so several scenarios can
-        share one workload (the fig3/table1 pattern).
+        share one workload (the fig3/table1 pattern).  ``recorder`` (an
+        ``repro.obs.EventRecorder``) captures the scheduler event stream.
         """
         from repro.core.engine import simulate
 
@@ -116,7 +117,8 @@ class Scenario:
         long_pol, short_pol = self.policies()
         return simulate(trace, cfg, long_policy=long_pol,
                         short_policy=short_pol,
-                        controller=self.controller(cfg))
+                        controller=self.controller(cfg),
+                        recorder=recorder)
 
     def serving_config(self, *, quick: bool = False,
                        sim_overrides: Optional[Dict] = None):

@@ -1,0 +1,373 @@
+"""Flight-recorder tests (``repro.obs``): the typed scheduler event log,
+the Perfetto tracer, and the metrics registry.
+
+  * cross-engine contract: the deterministic ``serve_*`` presets (one
+    on-demand replica, at most one transient, no revocations) produce
+    *identical* per-tick event streams on the Python serving oracle and
+    the JAX engine — the event log is a debugging diff, so it must agree
+    wherever the metrics agree bit-exactly;
+  * event conservation: RENT/PROVISION/DRAIN/REVOKE pair up on every
+    engine (DES, serving, serving_jax), tied to independently observed
+    fleet end-state where available;
+  * the tracer's disabled path allocates (almost) nothing — engines keep
+    ``tracer=None`` / ``enabled=False`` in the hot loop, so the overhead
+    bound is part of the contract;
+  * trace exports pass the structural schema check (and the check catches
+    deliberately broken files);
+  * RunResult validation gates the new telemetry: negative wall times,
+    serving_jax results without ``meta["obs"]`` / ``meta["fleet_spec"]``;
+  * the smoke driver persists a machine-readable ``smoke_summary.json``.
+"""
+
+import dataclasses
+import json
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.exp import (CANONICAL_METRICS, REQUIRED_SERIES, RunResult,
+                       validate_run_result)
+from repro.obs import (ADMIT, DRAIN, EVENT_TYPES, HEDGE, HEDGE_WIN,
+                       PROVISION, RENT, EventRecorder, MetricsRegistry,
+                       Tracer, check_replica_lifecycles,
+                       check_transient_conservation, diff_event_streams,
+                       events_from_counts, timed, trace_from_run_result,
+                       validate_trace_events, validate_trace_file)
+from repro.runtime import serving_jax as sj
+from repro.runtime.serving import (ElasticServingFleet, Request,
+                                   ServingFleetConfig)
+
+# ------------------------------------------------------------ event schema
+
+
+def test_event_type_order_is_the_on_disk_schema():
+    # column order is load-bearing: serving_jax emits its per-tick event
+    # vector in exactly this order, and persisted event_counts series
+    # decode against it — append-only, never reorder
+    assert EVENT_TYPES == ("RENT", "PROVISION", "DRAIN", "REVOKE", "HEDGE",
+                           "HEDGE_WIN", "ADMIT", "DISPLACE", "REROUTE")
+    assert (RENT, PROVISION, DRAIN, ADMIT) == (0, 1, 2, 6)
+
+
+def test_recorder_counts_roundtrip():
+    rec = EventRecorder()
+    rec.emit(0, RENT)
+    rec.emit(3, PROVISION, replica=7)
+    rec.emit(3, ADMIT, replica=7, rid=2)
+    rec.emit(9, DRAIN, replica=7)
+    rec.emit(9, ADMIT, count=3)
+    counts = rec.counts(10)
+    assert counts.shape == (10, len(EVENT_TYPES))
+    assert int(counts.sum()) == len(rec) == 7
+    back = events_from_counts(counts)
+    assert back.type_counts() == rec.type_counts()
+    assert diff_event_streams(rec, back) == []
+    assert diff_event_streams(rec, counts[:4]) != []  # truncated stream
+
+
+def test_events_from_counts_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        events_from_counts(np.zeros((5, 3)))
+
+
+def test_conservation_and_lifecycle_checks_flag_violations():
+    rec = EventRecorder()
+    rec.emit(0, PROVISION, replica=1)  # PROVISION without RENT
+    rec.emit(2, DRAIN, replica=1)
+    rec.emit(5, DRAIN, replica=1)      # second end for the same replica
+    assert any("PROVISION" in p
+               for p in check_transient_conservation(rec))
+    assert any("after" in p for p in check_replica_lifecycles(rec))
+    ok = EventRecorder()
+    ok.emit(0, RENT)
+    ok.emit(3, PROVISION, replica=1)
+    ok.emit(8, DRAIN, replica=1)
+    assert check_transient_conservation(ok, n_online_end=0,
+                                        n_pending_end=0) == []
+    assert check_replica_lifecycles(ok) == []
+
+
+# --------------------------------------------- cross-engine event streams
+#
+# Same deterministic presets as tests/test_serving_jax.py's bit-exact
+# metric tests: one on-demand replica, at most one transient, mttf=0 —
+# no random probing choice, no revocation, so the serving oracle and the
+# JAX engine must produce identical per-tick event streams.
+
+_DET_CASES = [
+    (ServingFleetConfig(n_replicas=1, max_transient=0, threshold=0.5,
+                        provisioning_delay=3.0, tick_s=1.0),
+     [Request(0, 0, 3), Request(1, 0, 2), Request(2, 4, 1)],
+     np.zeros(30, int), 30),
+    (ServingFleetConfig(n_replicas=1, max_transient=1, threshold=0.5,
+                        provisioning_delay=3.0, tick_s=1.0),
+     [Request(0, 0, 3), Request(1, 2, 4), Request(2, 6, 2),
+      Request(3, 8, 3), Request(4, 12, 2), Request(5, 21, 1)],
+     None, 40),
+    (ServingFleetConfig(n_replicas=1, max_transient=1, max_slots=2,
+                        threshold=0.5, provisioning_delay=3.0),
+     [Request(0, 0, 3), Request(1, 2, 4), Request(2, 6, 2),
+      Request(3, 8, 3), Request(4, 12, 2), Request(5, 21, 1)],
+     None, 40),
+]
+
+
+def _pin(case_pin, T):
+    if case_pin is not None:
+        return case_pin
+    pin = np.zeros(T, int)
+    pin[5:20] = 1
+    return pin
+
+
+def _py_events(cfg, reqs_proto, pin, max_ticks):
+    reqs = [Request(q.rid, q.arrival, q.gen_len, job_id=q.job_id)
+            for q in reqs_proto]
+    rec = EventRecorder()
+    fleet = ElasticServingFleet.from_config(cfg, seed=0, recorder=rec)
+    fleet.run(reqs, lambda t: int(pin[t]) if t < len(pin) else 0, max_ticks)
+    return fleet, rec, reqs
+
+
+@pytest.mark.parametrize("case", range(len(_DET_CASES)))
+def test_serving_vs_jax_event_streams_identical(case):
+    cfg, reqs, case_pin, T = _DET_CASES[case]
+    pin = _pin(case_pin, T)
+    fleet, rec, _ = _py_events(cfg, reqs, pin, T)
+    _, series, _ = sj.run_workload(cfg, reqs, pin, T, sim_seed=0)
+    diff = diff_event_streams(rec.counts(T), series["event_counts"])
+    assert diff == [], diff
+    # and both streams individually conserve, tied to the oracle end-state
+    n_online = sum(1 for r in fleet.replicas
+                   if r.kind == "transient" and r.offline_at is None)
+    for log in (rec, series["event_counts"]):
+        assert check_transient_conservation(
+            log, n_online_end=n_online,
+            n_pending_end=len(fleet.pending_online), horizon=T) == []
+    assert check_replica_lifecycles(rec) == []
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_jax_event_counts_conserve_on_random_workloads(seed):
+    rng = np.random.default_rng(100 + seed)
+    T, n = 400, 80
+    arr = np.sort(rng.integers(0, T - 20, n))
+    reqs = [Request(i, int(arr[i]), int(rng.integers(1, 6)))
+            for i in range(n)]
+    pin = np.zeros(T, int)
+    pin[50:150] = int(rng.integers(1, 3))
+    cfg = ServingFleetConfig(n_replicas=2, max_transient=2, threshold=0.5,
+                             provisioning_delay=3.0, tick_s=1.0)
+    _, series, _ = sj.run_workload(cfg, reqs, pin, T, sim_seed=seed)
+    ec = series["event_counts"]
+    assert ec.shape == (T, len(EVENT_TYPES))
+    assert check_transient_conservation(ec) == []
+    totals = ec.sum(axis=0)
+    assert totals[HEDGE_WIN] <= totals[HEDGE]
+    assert totals[ADMIT] >= 1  # work actually flowed
+
+
+def test_des_engine_emits_conserving_events():
+    from repro.sched import get_scenario
+
+    rec = EventRecorder()
+    get_scenario("serve_yahoo").run(
+        quick=True, seed=7, sim_seed=0, recorder=rec,
+        trace_overrides=dict(n_servers=150, n_short=8, horizon=2 * 3600.0))
+    assert len(rec) > 0
+    assert rec.type_counts()["ADMIT"] > 0
+    assert check_transient_conservation(rec) == []
+    assert check_replica_lifecycles(rec) == []
+
+
+# ------------------------------------------------------------------ tracer
+
+
+def test_tracer_disabled_path_is_allocation_free():
+    tr = Tracer(enabled=False)
+    tracemalloc.start()
+    base = tracemalloc.take_snapshot()
+    for i in range(10_000):
+        tr.complete("req", i, 1.0, tid=3)
+        tr.counter("queue_depth", i, i % 7)
+        tr.async_begin("transient", i, aid=i, cat="transient")
+    snap = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    grown = sum(s.size_diff for s in snap.compare_to(base, "lineno")
+                if s.size_diff > 0)
+    assert tr.events == []
+    # 30k disabled calls must not accumulate anything; the bound is loose
+    # (interpreter noise) but catches any per-call allocation regression
+    assert grown < 16_384, f"disabled tracer grew {grown} bytes"
+
+
+def test_tracer_export_passes_schema_check(tmp_path):
+    tr = Tracer(tick_s=2.0)
+    tr.process_name(0, "fleet")
+    tr.thread_name(0, 1, "ondemand-1")
+    tr.async_begin("transient", 3, aid=5, cat="transient", tid=5)
+    tr.complete("req 0", 4, 2, tid=1, args={"gen_len": 2})
+    tr.flow_start("hedge", 5, fid=0, tid=1)
+    tr.flow_end("hedge", 5, fid=0, tid=5)
+    tr.counter("queue_depth", 0, 0)
+    tr.counter("queue_depth", 6, 3)
+    tr.async_end("transient", 9, aid=5, cat="transient", tid=5,
+                 args={"end": "drain"})
+    path = tr.export(str(tmp_path / "t.trace.json"))
+    assert validate_trace_file(path, require_counters=("queue_depth",),
+                               require_async_cats=("transient",)) == []
+    obj = json.loads((tmp_path / "t.trace.json").read_text())
+    # ticks scale to microseconds through tick_s
+    xs = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert xs[0]["ts"] == pytest.approx(4 * 2.0 * 1e6)
+
+
+def test_trace_schema_check_catches_breakage(tmp_path):
+    bad = {"traceEvents": [
+        {"ph": "C", "name": "q", "pid": 0, "tid": 0, "ts": 5.0,
+         "args": {"value": 1.0}},
+        {"ph": "C", "name": "q", "pid": 0, "tid": 0, "ts": 1.0,
+         "args": {"value": 2.0}},  # ts goes backwards on the track
+        {"ph": "X", "name": "r", "pid": 0, "tid": 1, "ts": 0.0,
+         "dur": -4.0},             # negative duration
+        {"ph": "b", "name": "s", "pid": 0, "tid": 1, "ts": 0.0},  # no id/cat
+    ]}
+    problems = validate_trace_events(bad)
+    assert len(problems) >= 3
+    assert validate_trace_events({"nope": 1}) != []
+    # and the CLI exits nonzero on it
+    from repro.obs.trace import _main
+
+    p = tmp_path / "bad.trace.json"
+    p.write_text(json.dumps(bad))
+    assert _main(["--check", str(p)]) == 1
+
+
+def test_disabled_tracer_in_fleet_changes_nothing():
+    cfg, reqs, case_pin, T = _DET_CASES[1]
+    pin = _pin(case_pin, T)
+    off = Tracer(enabled=False)
+    fleet, _, ref_reqs = _py_events(cfg, reqs, pin, T)
+    reqs2 = [Request(q.rid, q.arrival, q.gen_len) for q in reqs]
+    fleet2 = ElasticServingFleet.from_config(cfg, seed=0, tracer=off)
+    fleet2.run(reqs2, lambda t: int(pin[t]) if t < len(pin) else 0, T)
+    assert off.events == []
+    assert sorted(q.wait for q in reqs2 if q.wait is not None) == \
+        sorted(q.wait for q in ref_reqs if q.wait is not None)
+    assert fleet2.n_hedges == fleet.n_hedges
+
+
+def test_live_tracer_records_transient_spans_and_counters():
+    cfg, reqs, case_pin, T = _DET_CASES[1]
+    pin = _pin(case_pin, T)
+    tr = Tracer(tick_s=cfg.tick_s)
+    reqs2 = [Request(q.rid, q.arrival, q.gen_len) for q in reqs]
+    fleet = ElasticServingFleet.from_config(cfg, seed=0, tracer=tr)
+    fleet.run(reqs2, lambda t: int(pin[t]) if t < len(pin) else 0, T)
+    assert validate_trace_events(tr.to_dict(),
+                                 require_counters=("queue_depth",),
+                                 require_async_cats=("transient",)) == []
+    phs = {e["ph"] for e in tr.events}
+    assert {"b", "e", "X", "C", "M"} <= phs  # spans, slices, counters
+
+
+def test_trace_from_run_result_fallback(tmp_path):
+    rec = EventRecorder()
+    rec.emit(2, RENT)
+    rec.emit(5, PROVISION, replica=1)
+    rr = _valid_rr("serving_jax")
+    rr = dataclasses.replace(rr, series={**rr.series,
+                                         "queue_depth": np.arange(4.0),
+                                         "event_counts": rec.counts(6)})
+    path = trace_from_run_result(rr, str(tmp_path / "fb.trace.json"))
+    assert validate_trace_file(path,
+                               require_counters=("queue_depth",)) == []
+
+
+# --------------------------------------------------------- metrics registry
+
+
+def test_metrics_registry_snapshot_and_kinds():
+    reg = MetricsRegistry()
+    reg.counter("hits").inc()
+    reg.counter("hits").inc(2)
+    reg.gauge("depth").set(4.5)
+    for v in range(1, 101):
+        reg.histogram("lat").observe(float(v))
+    snap = reg.snapshot()
+    assert snap["counters"]["hits"] == 3
+    assert snap["gauges"]["depth"] == 4.5
+    h = snap["histograms"]["lat"]
+    assert h["count"] == 100 and h["p50"] == 50.0 and h["p99"] == 99.0
+    with pytest.raises(TypeError):
+        reg.gauge("hits")  # registered as a counter
+    with timed("block_s", reg):
+        pass
+    assert reg.snapshot()["histograms"]["block_s"]["count"] == 1
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_serving_jax_run_records_obs_telemetry():
+    cfg, reqs, case_pin, T = _DET_CASES[0]
+    pin = _pin(case_pin, T)
+    sj.run_workload(cfg, reqs, pin, T, sim_seed=0)
+    obs = sj.last_run_obs()
+    assert set(obs) >= {"jit_cache", "compile", "steady"}
+    total = obs["jit_cache"]["hits"] + obs["jit_cache"]["misses"]
+    assert total >= 1
+    assert obs["compile"]["count"] + obs["steady"]["count"] >= 1
+
+
+# ------------------------------------------------- RunResult schema gating
+
+
+def _valid_rr(engine="serving", scenario="serve_yahoo") -> RunResult:
+    metrics = {m: 1.0 for m in CANONICAL_METRICS}
+    series = {name: (np.zeros((3, len(EVENT_TYPES)))
+                     if name == "event_counts" else np.arange(3.0))
+              for name in REQUIRED_SERIES.get(engine, ())}
+    meta = {}
+    if engine == "serving_jax":
+        meta = {"fleet_spec": {"n_replicas": 1},
+                "obs": {"jit_cache": {"hits": 1, "misses": 1},
+                        "compile": {"count": 1}, "steady": {"count": 0}}}
+    return RunResult(engine=engine, scenario=scenario,
+                     config={"n_replicas": 8}, overrides={},
+                     metrics=metrics, series=series, seed=42, sim_seed=42,
+                     meta=meta)
+
+
+def test_validate_accepts_serving_jax_with_obs():
+    assert validate_run_result(_valid_rr("serving_jax")) == []
+
+
+@pytest.mark.parametrize("corrupt,needle", [
+    (dict(wall_time_s=-0.5), "negative wall_time_s"),
+    (dict(meta={"obs": {"jit_cache": {}, "compile": {}, "steady": {}}}),
+     "fleet_spec"),
+    (dict(meta={"fleet_spec": {"n_replicas": 1}}), "obs"),
+    (dict(meta={"fleet_spec": {"n_replicas": 1}, "obs": {"jit_cache": {}}}),
+     "obs"),
+])
+def test_validate_flags_missing_telemetry(corrupt, needle):
+    rr = dataclasses.replace(_valid_rr("serving_jax"), **corrupt)
+    problems = validate_run_result(rr)
+    assert problems and any(needle in p for p in problems), problems
+
+
+# ------------------------------------------------------- smoke summary file
+
+
+def test_smoke_writes_machine_readable_summary(tmp_path):
+    from repro.launch import smoke
+
+    _valid_rr("serving").save(tmp_path / "serve_yahoo-serving.runresult.npz")
+    assert smoke.main(["--validate-only", "--out-dir", str(tmp_path)]) == 0
+    summary = json.loads((tmp_path / "smoke_summary.json").read_text())
+    assert summary["validate_only"] is True
+    assert summary["n_validated"] == 1
+    assert summary["n_schema_invalid"] == 0
+    assert summary["validation"][0]["engine"] == "serving"
