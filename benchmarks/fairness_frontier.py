@@ -1,0 +1,120 @@
+"""The burstiness-fairness frontier: what a tenant's burst credits buy.
+
+On the ``serve_tenant_trio`` preset (steady Poisson / flash-crowd /
+heavy-tail tenants sharing the elastic serving fleet), TenantGuard's
+per-tenant token buckets are swept across a ladder of credit budgets —
+every tenant's ``credit_rate`` / ``credit_burst`` scaled together by
+``BUDGET_SCALES`` — and compared against two credit-blind baselines at
+the same paid transient budget (``avg_active_transients / r`` on-demand
+equivalents):
+
+  * plain Eagle (``serve_tenant_trio_eagle``): probing spreads every
+    tenant's spikes across every replica;
+  * BurstGuard: one aggregate backlog share, no per-tenant accounting.
+
+Each frontier rung reports the bursty tenant's delay (avg / p99 wait)
+against the steady tenant's SLO attainment, plus Jain fairness over the
+per-tenant attainments. The headline gate —
+``steady_slo_gap_at_equal_budget`` — is the steady (Poisson) tenant's
+attainment gain over Eagle at the best TenantGuard rung whose paid
+budget does not exceed Eagle's: positive means per-tenant credits
+strictly dominate credit-blind routing for the tenant that stayed
+inside its share, which is the point of the subsystem.
+
+All runs are seed-averaged over ``SEEDS`` on ``engine="serving"`` (the
+oracle tick loop; the JAX engine agrees within noise — see
+``tests/test_tenancy.py``).
+
+Usage: PYTHONPATH=src python -m benchmarks.run --quick --only fairness_frontier
+   or: PYTHONPATH=src python -m benchmarks.fairness_frontier --quick
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro import exp
+from repro.sched import get_scenario
+from repro.tenancy import get_tenant_set
+
+SCENARIO = "serve_tenant_trio"
+BASELINE = "serve_tenant_trio_eagle"
+TENANT_SET = "trio"
+#: multiplier ladder on every tenant's (credit_rate, credit_burst)
+BUDGET_SCALES = (0.1, 0.25, 0.5, 1.0, 2.0)
+SEEDS = (42, 43, 44)
+#: paid-budget slack for the equal-budget comparison: rungs whose paid
+#: transient budget exceeds Eagle's by more than this are not "equal"
+BUDGET_SLACK = 0.10
+
+_KEYS = ("tenant/steady/slo_attainment", "tenant/bursty/slo_attainment",
+         "tenant/heavytail/slo_attainment", "tenant/bursty/avg_wait_s",
+         "tenant/bursty/p99_wait_s", "tenant/steady/p99_wait_s",
+         "tenant_jain_fairness", "n_done")
+
+
+def _run_avg(sc, *, quick: bool, cost_ratio: float) -> dict:
+    """Seed-averaged serving-engine metrics for one scenario variant."""
+    rows = []
+    for seed in SEEDS:
+        rr = exp.run(sc, engine="serving", quick=quick, seed=seed,
+                     sim_seed=0)
+        row = {k: rr.metrics[k] for k in _KEYS}
+        row["n_throttled"] = rr.metrics.get("n_throttled", 0.0)
+        row["paid_budget"] = rr.metrics["avg_active_transients"] / cost_ratio
+        rows.append(row)
+    return {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
+
+
+def run(quick: bool = False) -> dict:
+    ts = get_tenant_set(TENANT_SET)
+    rates, bursts = ts.credit_rates(), ts.credit_bursts()
+    r = get_scenario(SCENARIO).sim_config(quick=quick).cost_ratio
+
+    eagle = _run_avg(get_scenario(BASELINE), quick=quick, cost_ratio=r)
+    burst_guard = _run_avg(
+        get_scenario(SCENARIO, short_policy="burst_guard",
+                     policy_kwargs=dict(guard_frac=0.5)),
+        quick=quick, cost_ratio=r)
+
+    frontier = []
+    for scale in BUDGET_SCALES:
+        sc = get_scenario(SCENARIO, policy_kwargs=dict(
+            n_tenants=ts.n_tenants,
+            credit_rate=[x * scale for x in rates],
+            credit_burst=[x * scale for x in bursts]))
+        frontier.append({"budget_scale": float(scale),
+                         **_run_avg(sc, quick=quick, cost_ratio=r)})
+
+    # equal-paid-budget comparison: the best steady-tenant attainment among
+    # rungs that spend no more transient budget than Eagle does
+    cap = eagle["paid_budget"] * (1.0 + BUDGET_SLACK)
+    eligible = [f for f in frontier if f["paid_budget"] <= cap] or frontier
+    best = max(eligible, key=lambda f: f["tenant/steady/slo_attainment"])
+    gap = (best["tenant/steady/slo_attainment"]
+           - eagle["tenant/steady/slo_attainment"])
+
+    return {
+        "scenario": SCENARIO,
+        "seeds": list(SEEDS),
+        "cost_ratio": float(r),
+        "eagle": eagle,
+        "burst_guard": burst_guard,
+        "frontier": frontier,
+        "best_budget_scale": best["budget_scale"],
+        "steady_slo_gap_at_equal_budget": float(gap),
+        "steady_slo_attainment_tenant_guard":
+            best["tenant/steady/slo_attainment"],
+        "steady_slo_attainment_eagle":
+            eagle["tenant/steady/slo_attainment"],
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(run(quick=args.quick), indent=1, default=float))

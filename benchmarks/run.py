@@ -12,6 +12,9 @@ artifacts/bench/.
   serving_scale — serving-engine throughput: Python tick loop vs the
             jitted JAX fleet (engine="serving_jax"), single runs and the
             one-device-program sweep cube
+  fairness_frontier — multi-tenant burstiness-fairness frontier: TenantGuard
+            credit-budget ladder vs Eagle / BurstGuard at equal paid
+            transient budget (serve_tenant_trio preset)
   calibration — registry-wide fluid-vs-DES error tables + FluidPolicyParams
                 grid fit (repro.exp.compare); opt-in via --only (one DES +
                 ~17 fluid runs per scenario — minutes at full scale)
@@ -27,9 +30,9 @@ import json
 import pathlib
 import time
 
-from benchmarks import (calibration, fig1_burstiness, fig3_queueing_cdf,
-                        roofline, serving_delay, serving_scale, sweep_jax,
-                        table1_lifetimes)
+from benchmarks import (calibration, fairness_frontier, fig1_burstiness,
+                        fig3_queueing_cdf, roofline, serving_delay,
+                        serving_scale, sweep_jax, table1_lifetimes)
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -72,6 +75,15 @@ def _derived(name: str, res: dict) -> str:
                 f"{res['cube']['n_points']}pts "
                 f"{res['cube']['req_per_s']:.0f} req/s | "
                 f"agree={res['agreement']['avg_wait_rel_err']:.1%}")
+    if name == "fairness_frontier":
+        e, b = res["eagle"], res["frontier"][-1]
+        return (f"steady SLO: eagle={res['steady_slo_attainment_eagle']:.2f} "
+                f"tguard={res['steady_slo_attainment_tenant_guard']:.2f} "
+                f"(x{res['best_budget_scale']:.2g}) "
+                f"gap={res['steady_slo_gap_at_equal_budget']:+.3f} | "
+                f"bursty wait {e['tenant/bursty/avg_wait_s']:.0f}s->"
+                f"{b['tenant/bursty/avg_wait_s']:.0f}s jain="
+                f"{b['tenant_jain_fairness']:.2f} @B={b['paid_budget']:.2f}")
     if name == "calibration":
         return (f"{len(res['scenarios'])} scenarios; mean |rel err| "
                 f"before={res['mean_abs_rel_err_before']:.1%} "
@@ -96,6 +108,7 @@ def main() -> None:
         "sweep": sweep_jax.run,
         "serving": serving_delay.run,
         "serving_scale": serving_scale.run,
+        "fairness_frontier": fairness_frontier.run,
         "calibration": calibration.run,
         "roofline": roofline.run,
     }

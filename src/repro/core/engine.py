@@ -84,10 +84,22 @@ class _Sim:
         self.long_policy = (long_policy or LeastLoadedCentral()).bind(self)
         self.short_policy = (short_policy or EagleProbing()).bind(self)
         self.controller = controller or ControllerSpec.from_sim_config(cfg)
+        # tenancy hooks: token-bucket clock + throttle counter on the
+        # policy (TenantGuardProbing); cached so other policies pay one
+        # attribute check per construction, not per placement
+        self._policy_advance = getattr(self.short_policy, "advance", None)
+        self._policy_throttles = hasattr(self.short_policy, "n_throttled")
 
         # stats
         self.short_waits: List[float] = []
         self.long_waits: List[float] = []
+        # per-tenant short waits when the trace is multi-tenant (the
+        # builder encodes job_id % n_tenants == tenant_id, so no side
+        # table); empty meta keeps single-tenant runs on the fast path
+        meta = trace.meta or {}
+        self.n_tenants = len(meta.get("tenants", ()))
+        self.tenant_short_waits: List[List[float]] = [
+            [] for _ in range(self.n_tenants)]
         self.lifetimes: List[float] = []
         self.n_long_busy = 0  # servers whose *running* task is long
         self.lr_samples: List = []
@@ -141,6 +153,8 @@ class _Sim:
             self.long_waits.append(wait)
         else:
             self.short_waits.append(wait)
+            if self.n_tenants:
+                self.tenant_short_waits[job_id % self.n_tenants].append(wait)
         s.running = (dur, self.now, is_long, job_id)
         s.run_gen += 1
         if self.recorder is not None:
@@ -188,8 +202,18 @@ class _Sim:
         self.long_policy.placed(sid)
 
     def _place_short(self, dur: float, job_id: int):
-        self._enqueue(self.short_policy.select(dur, job_id), dur, False,
-                      job_id)
+        if self._policy_advance is not None:
+            self._policy_advance(self.now)
+        if self._policy_throttles:
+            before = self.short_policy.n_throttled
+            sid = self.short_policy.select(dur, job_id)
+            if self.short_policy.n_throttled > before \
+                    and self.recorder is not None:
+                self.recorder.emit(self.now, ev.THROTTLE, replica=sid,
+                                   rid=job_id)
+        else:
+            sid = self.short_policy.select(dur, job_id)
+        self._enqueue(sid, dur, False, job_id)
 
     # ------------------------------------------------------ transient manager
 
@@ -337,6 +361,16 @@ class _Sim:
                 "sim_end": self.now,
                 "short_policy": self.short_policy.name,
                 "long_policy": self.long_policy.name,
+                **({"tenant_short_waits": [
+                        np.asarray(w) for w in self.tenant_short_waits],
+                    "tenants": list(self.trace.meta["tenants"]),
+                    "tenant_slo_s": [
+                        float(s)
+                        for s in self.trace.meta.get(
+                            "tenant_slo_s", [120.0] * self.n_tenants)]}
+                   if self.n_tenants else {}),
+                **({"n_throttled": self.short_policy.n_throttled}
+                   if self._policy_throttles else {}),
             },
         )
 

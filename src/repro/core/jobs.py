@@ -16,6 +16,7 @@ class Job:
     arrival: float
     durations: np.ndarray  # (n_tasks,) seconds
     is_long: bool
+    tenant_id: int = 0  # multi-tenant traces stamp the owning tenant
 
     @property
     def n_tasks(self) -> int:

@@ -110,6 +110,22 @@ def validate_run_result(rr: "RunResult") -> list:
                 any(k not in obs for k in _OBS_KEYS):
             problems.append("serving_jax result without meta['obs'] "
                             f"telemetry (need keys {list(_OBS_KEYS)})")
+    tenants = rr.meta.get("tenants") if isinstance(rr.meta, dict) else None
+    if tenants:
+        # a tenant-aware run must carry the full per-tenant block: the
+        # named p99/SLO metrics, the fairness scalar and the flat
+        # (tenant_id, wait_s) series (legitimately empty only when no
+        # request ever started)
+        need = [f"tenant/{n}/{m}" for n in tenants
+                for m in ("p99_wait_s", "slo_attainment")]
+        need.append("tenant_jain_fairness")
+        t_missing = [m for m in need if m not in rr.metrics]
+        if t_missing:
+            problems.append(f"tenant-aware result missing metrics: "
+                            f"{t_missing}")
+        if "tenant_waits" not in rr.series:
+            problems.append("tenant-aware result missing series "
+                            "'tenant_waits'")
     return problems
 
 
@@ -284,6 +300,20 @@ def _trace_meta(trace) -> Dict:
             "utilization": float(trace.meta.get("utilization", 0.0))}
 
 
+def _attach_tenant_block(metrics: Dict, series: Dict, waits_by_tenant,
+                         names, slo_targets_s) -> None:
+    """Fold the shared per-tenant metric block (p99 / SLO attainment /
+    Jain fairness + the flat ``tenant_waits`` series) into an adapter's
+    output — one computation for every engine, so cross-engine per-tenant
+    comparisons diff like-for-like."""
+    from repro.tenancy import tenant_metric_block
+
+    tmetrics, twaits = tenant_metric_block(waits_by_tenant, names,
+                                           slo_targets_s)
+    metrics.update(tmetrics)
+    series["tenant_waits"] = twaits
+
+
 def from_sim_result(res: SimResult, *, scenario: str, engine: str = "des",
                     overrides: Optional[Dict] = None, quick: bool = False,
                     seed: Optional[int] = None, sim_seed: Optional[int] = None,
@@ -311,10 +341,19 @@ def from_sim_result(res: SimResult, *, scenario: str, engine: str = "des",
             "n_rescheduled": int(res.n_rescheduled)}
     if trace is not None:
         meta["trace"] = _trace_meta(trace)
+    metrics = {k: float(v) for k, v in res.summary().items()}
+    # multi-tenant DES runs surface per-tenant waits through extras (the
+    # raw arrays become the tenant block, not JSON meta payload)
+    t_waits = meta.pop("tenant_short_waits", None)
+    if t_waits is not None:
+        _attach_tenant_block(metrics, series, t_waits, meta["tenants"],
+                             meta["tenant_slo_s"])
+    if "n_throttled" in meta:
+        metrics["n_throttled"] = float(meta["n_throttled"])
     return RunResult(
         engine=engine, scenario=scenario, config=_jsonable(config),
         overrides=dict(overrides or {}),
-        metrics={k: float(v) for k, v in res.summary().items()},
+        metrics=metrics,
         series=series, seed=seed, sim_seed=sim_seed, quick=quick,
         wall_time_s=float(wall_time_s), meta=_jsonable(meta))
 
@@ -427,6 +466,18 @@ def from_serving_fleet(fleet, requests, *, scenario: str, config,
         meta["obs"] = {"events": recorder.type_counts()}
     if trace is not None:
         meta["trace"] = _trace_meta(trace)
+    tenancy = getattr(fleet, "tenancy", None)
+    if tenancy is not None:
+        _attach_tenant_block(
+            metrics, series,
+            [np.asarray(w, float) * tick_s for w in tenancy.waits],
+            tenancy.names,
+            [s * tick_s for s in tenancy.slo_targets])
+        meta["tenants"] = list(tenancy.names)
+    n_thr = getattr(getattr(fleet, "short_policy", None), "n_throttled",
+                    None)
+    if n_thr is not None:
+        metrics["n_throttled"] = float(n_thr)
     return RunResult(
         engine="serving", scenario=scenario, config=_jsonable(cfg),
         overrides=dict(overrides or {}), metrics=metrics, series=series,
@@ -470,9 +521,20 @@ def from_serving_jax(metrics: Dict[str, float], series: Dict, *,
         meta["obs"] = _jsonable(obs)
     if trace is not None:
         meta["trace"] = _trace_meta(trace)
+    metrics = {k: float(v) for k, v in metrics.items()}
+    # tenant-aware runs: the engine already emitted exact per-request
+    # (tenant, wait) pairs; name them with the trace meta's tenant list
+    names = (trace.meta or {}).get("tenants") if trace is not None else None
+    t_waits = series.get("tenant_waits")
+    if names and t_waits is not None:
+        slo = trace.meta.get("tenant_slo_s", [120.0] * len(names))
+        waits_by = [t_waits[t_waits[:, 0] == i, 1]
+                    for i in range(len(names))]
+        _attach_tenant_block(metrics, series, waits_by, names, slo)
+        meta["tenants"] = list(names)
     return RunResult(
         engine="serving_jax", scenario=scenario, config=_jsonable(cfg),
         overrides=dict(overrides or {}),
-        metrics={k: float(v) for k, v in metrics.items()}, series=series,
+        metrics=metrics, series=series,
         seed=seed, sim_seed=sim_seed, quick=quick,
         wall_time_s=float(wall_time_s), meta=meta)

@@ -237,6 +237,18 @@ def _run_serving(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
     requests, pinned_fn, max_ticks, wl_meta = build_serving_workload(trace,
                                                                      cfg)
     _, short_pol = sc.policies()
+    # multi-tenant trace: per-tenant SLO bookkeeping (tick units) drives
+    # the fleet's debt-aware drain/hedge victim selection; the policy's
+    # token buckets move from work-seconds to work-ticks
+    tenancy = None
+    t_names = (trace.meta or {}).get("tenants")
+    if t_names:
+        from repro.tenancy import TenancyState
+
+        slo = trace.meta.get("tenant_slo_s", [120.0] * len(t_names))
+        tenancy = TenancyState(t_names, [s / cfg.tick_s for s in slo])
+        if hasattr(short_pol, "scale_costs") and cfg.tick_s != 1.0:
+            short_pol.scale_costs(1.0 / cfg.tick_s)
     recorder = None
     if record_events:
         from repro.obs import EventRecorder
@@ -245,7 +257,7 @@ def _run_serving(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
     fleet = ElasticServingFleet.from_config(
         cfg, short_policy=short_pol, decode_fn=decode_fn, seed=sim_seed,
         drain_preference=sc.drain_preference, recorder=recorder,
-        tracer=tracer)
+        tracer=tracer, tenancy=tenancy)
     fleet.run(requests, pinned_fn, max_ticks)
     return from_serving_fleet(
         fleet, requests, scenario=sc.name, config=cfg, workload_meta=wl_meta,
@@ -257,8 +269,12 @@ def _run_serving(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
 
 def _serving_jax_setup(sc: Scenario, *, quick: bool, seed: int, trace,
                        trace_overrides: Dict, sim_overrides: Dict):
-    """Shared trace -> (cfg, requests, pinning, wl_meta, spot) prologue for
-    the serving_jax run and sweep paths."""
+    """Shared trace -> (cfg, requests, pinning, wl_meta, spot, tenancy)
+    prologue for the serving_jax run and sweep paths.  The tenancy triple
+    is ``(n_tenants, credit_rate, credit_burst)``: tenant count from the
+    trace meta (a static shape), token-bucket vectors in tick units from
+    the scenario's ``tenant_guard`` policy (``None`` — an inert gate —
+    under any other policy)."""
     from repro.runtime.serving import build_serving_workload
 
     if trace is None:
@@ -268,7 +284,15 @@ def _serving_jax_setup(sc: Scenario, *, quick: bool, seed: int, trace,
     requests, _, max_ticks, wl_meta = build_serving_workload(trace, cfg)
     _, short_pol = sc.policies()
     spot = getattr(short_pol, "name", "") == "spot_aware"
-    return trace, cfg, requests, max_ticks, wl_meta, spot
+    t_names = (trace.meta or {}).get("tenants")
+    n_tenants = len(t_names) if t_names else 1
+    credit_rate = credit_burst = None
+    if n_tenants > 1 and getattr(short_pol, "name", "") == "tenant_guard":
+        buckets = short_pol.credits.buckets
+        credit_rate = [b.rate for b in buckets]
+        credit_burst = [b.burst / cfg.tick_s for b in buckets]
+    return (trace, cfg, requests, max_ticks, wl_meta, spot,
+            (n_tenants, credit_rate, credit_burst))
 
 
 def _run_serving_jax(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
@@ -283,13 +307,15 @@ def _run_serving_jax(sc: Scenario, *, quick: bool, seed: int, sim_seed: int,
     from repro.runtime import serving_jax
 
     t0 = time.perf_counter()
-    trace, cfg, requests, max_ticks, wl_meta, spot = _serving_jax_setup(
+    (trace, cfg, requests, max_ticks, wl_meta, spot,
+     (n_tenants, credit_rate, credit_burst)) = _serving_jax_setup(
         sc, quick=quick, seed=seed, trace=trace,
         trace_overrides=trace_overrides, sim_overrides=sim_overrides)
     metrics, series, spec = serving_jax.run_workload(
         cfg, requests, wl_meta["pinned_per_tick"], max_ticks,
         drain_preference=sc.drain_preference, spot_pricing=spot,
-        sim_seed=sim_seed, queue_cap=queue_cap)
+        sim_seed=sim_seed, queue_cap=queue_cap, n_tenants=n_tenants,
+        credit_rate=credit_rate, credit_burst=credit_burst)
     return from_serving_jax(
         metrics, series, scenario=sc.name, config=cfg, spec=spec,
         workload_meta=wl_meta,
@@ -523,7 +549,9 @@ def _sweep_serving_jax(sc: Scenario, grid: Dict[str, Sequence], *,
     from repro.runtime import serving_jax
 
     t0 = time.perf_counter()
-    trace, cfg, requests, max_ticks, wl_meta, spot = _serving_jax_setup(
+    # the cube sweeps fleet knobs, not tenancy — the tenancy triple is
+    # dropped (credit-budget sweeps go through the pointwise path)
+    trace, cfg, requests, max_ticks, wl_meta, spot, _ = _serving_jax_setup(
         sc, quick=quick, seed=seed, trace=trace,
         trace_overrides=dict(trace_overrides or {}),
         sim_overrides=dict(sim_overrides or {}))

@@ -3,7 +3,8 @@
 Three pieces, one observability spine (see ROADMAP "repro/obs"):
 
   events.py  — typed scheduler event log (RENT, PROVISION, DRAIN, REVOKE,
-               HEDGE, HEDGE_WIN, ADMIT, DISPLACE, REROUTE) emitted natively
+               HEDGE, HEDGE_WIN, ADMIT, DISPLACE, REROUTE, THROTTLE) emitted
+               natively
                by the Python engines (``core/engine``, ``sched/controller``,
                ``runtime/serving``) and reconstructed post-hoc for
                ``runtime/serving_jax`` from its per-tick event-count series
@@ -17,7 +18,7 @@ Three pieces, one observability spine (see ROADMAP "repro/obs"):
 
 from repro.obs.events import (ADMIT, DISPLACE, DRAIN, EVENT_TYPES,  # noqa: F401
                               HEDGE, HEDGE_WIN, PROVISION, RENT, REROUTE,
-                              REVOKE, EventRecorder, SchedEvent,
+                              REVOKE, THROTTLE, EventRecorder, SchedEvent,
                               check_replica_lifecycles,
                               check_transient_conservation,
                               diff_event_streams, events_from_counts)

@@ -12,12 +12,14 @@ paths every CloudCoaster engine shares:
   ADMIT      a request entered a decode slot (starts service)
   DISPLACE   a slot-resident request was evicted (pinning or revocation)
   REROUTE    a previously routed request went back through placement
+  THROTTLE   an over-credit tenant's request was denied the transient pool
+             and redirected to its fair general share (tenancy admission)
 
 The Python engines (``repro.core.engine``, ``repro.runtime.serving``) emit
 :class:`SchedEvent` records into an :class:`EventRecorder` at the decision
 site, with replica/request ids attached. ``repro.runtime.serving_jax``
 cannot emit host objects from inside ``lax.scan``; it records a per-tick
-``(T, 9)`` event-count series instead (one column per type, in
+``(T, N_EVENT_TYPES)`` event-count series instead (one column per type, in
 :data:`EVENT_TYPES` order) and :func:`events_from_counts` delta-decodes it
 into the same log shape post-hoc. Cross-engine comparison therefore
 canonicalizes to per-tick counts (:meth:`EventRecorder.counts` /
@@ -41,11 +43,11 @@ import numpy as np
 #: (``serving_jax`` emits its per-tick event vector in exactly this order)
 EVENT_TYPES: Tuple[str, ...] = (
     "RENT", "PROVISION", "DRAIN", "REVOKE", "HEDGE", "HEDGE_WIN",
-    "ADMIT", "DISPLACE", "REROUTE",
+    "ADMIT", "DISPLACE", "REROUTE", "THROTTLE",
 )
 
-RENT, PROVISION, DRAIN, REVOKE, HEDGE, HEDGE_WIN, ADMIT, DISPLACE, REROUTE \
-    = range(len(EVENT_TYPES))
+(RENT, PROVISION, DRAIN, REVOKE, HEDGE, HEDGE_WIN, ADMIT, DISPLACE, REROUTE,
+ THROTTLE) = range(len(EVENT_TYPES))
 
 N_EVENT_TYPES = len(EVENT_TYPES)
 
@@ -138,7 +140,8 @@ def check_transient_conservation(log, *, n_online_end: Optional[int] = None,
     one DRAIN or REVOKE, or survives as a still-online / still-pending
     residual at the horizon. Returns violation strings (empty = holds).
 
-    ``log`` is an :class:`EventRecorder` or a ``(T, 9)`` count array.
+    ``log`` is an :class:`EventRecorder` or a ``(T, N_EVENT_TYPES)`` count
+    array.
     ``n_online_end`` / ``n_pending_end`` tie the residual to independently
     observed end-state (fleet introspection, ``final_online_transients``);
     omitted, only the internal inequalities are checked."""
@@ -193,7 +196,8 @@ def diff_event_streams(a, b, *, horizon: Optional[int] = None,
     """Cross-engine event-stream diff: compare per-tick per-type counts and
     report mismatched cells as readable strings (empty = identical).
 
-    ``a``/``b`` are :class:`EventRecorder` logs or ``(T, 9)`` count arrays;
+    ``a``/``b`` are :class:`EventRecorder` logs or ``(T, N_EVENT_TYPES)``
+    count arrays;
     ``types`` restricts the comparison (e.g. skip REROUTE when a known
     flush-timing deviation is in play — see the serving_jax module
     docstring's deviation inventory)."""

@@ -58,11 +58,14 @@ class Tracer:
 
     # -- spans / instants -------------------------------------------------
     def complete(self, name: str, t: float, dur: float, *, pid: int = 0,
-                 tid: int = 0, args: Optional[dict] = None) -> None:
+                 tid: int = 0, args: Optional[dict] = None,
+                 cat: Optional[str] = None) -> None:
         if not self.enabled:
             return
         ev = {"ph": "X", "name": name, "pid": pid, "tid": tid,
               "ts": t * self._scale, "dur": max(dur, 0.0) * self._scale}
+        if cat:
+            ev["cat"] = cat  # e.g. the owning tenant of a request slice
         if args:
             ev["args"] = args
         self.events.append(ev)

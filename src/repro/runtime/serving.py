@@ -98,6 +98,7 @@ class Request:
     finish: Optional[int] = None
     hedged: bool = False
     job_id: int = 0
+    tenant_id: int = 0  # owning tenant (multi-tenant traces; 0 otherwise)
     #: set on hedge copies -> the original request (wait/finish bookkeeping
     #: lives on the original; first completion wins)
     primary: Optional["Request"] = None
@@ -269,13 +270,17 @@ class ElasticServingFleet:
                  spec: Optional[ControllerSpec] = None,
                  short_policy: Optional[ShortPlacementPolicy] = None,
                  probe_d: int = 2, probe_retries: int = 3,
-                 recorder=None, tracer=None):
+                 recorder=None, tracer=None, tenancy=None):
         self.spec = spec or ControllerSpec(threshold, max_transient,
                                            provisioning_delay)
         #: optional obs.EventRecorder / obs.Tracer — None keeps every
         #: emission site a single attribute check (zero-cost when off)
         self.recorder = recorder
         self.tracer = tracer
+        #: optional repro.tenancy.TenancyState — None keeps every tenant
+        #: hook (per-tenant waits, SLO-debt drain/hedge victims) inert and
+        #: the single-tenant paths bit-identical
+        self.tenancy = tenancy
         self.provisioning_delay = int(self.spec.provisioning_delay)
         self.hedge_factor = hedge_factor
         self.max_slots = int(max_slots)
@@ -310,6 +315,11 @@ class ElasticServingFleet:
         for r in self.replicas:
             self._view.register(r)
         self.short_policy = (short_policy or EagleProbing()).bind(self._view)
+        # credit-bearing policies (TenantGuard) expose a bucket clock and a
+        # throttle counter; cache the hooks so routing stays one attribute
+        # check per request for every other policy
+        self._policy_advance = getattr(self.short_policy, "advance", None)
+        self._policy_throttles = hasattr(self.short_policy, "n_throttled")
         if self.tracer is not None:
             self.tracer.process_name(0, "fleet")
             for r in self.replicas:
@@ -320,7 +330,8 @@ class ElasticServingFleet:
                     short_policy: Optional[ShortPlacementPolicy] = None,
                     decode_fn: Optional[Callable] = None, seed: int = 0,
                     drain_preference: str = "least_loaded",
-                    recorder=None, tracer=None) -> "ElasticServingFleet":
+                    recorder=None, tracer=None, tenancy=None
+                    ) -> "ElasticServingFleet":
         spec = ControllerSpec(cfg.threshold, cfg.max_transient,
                               cfg.ticks(cfg.provisioning_delay),
                               drain_preference)
@@ -331,7 +342,7 @@ class ElasticServingFleet:
                    revocation_mttf_ticks=mttf, seed=seed, spec=spec,
                    short_policy=short_policy, probe_d=cfg.probe_d,
                    probe_retries=cfg.probe_retries,
-                   recorder=recorder, tracer=tracer)
+                   recorder=recorder, tracer=tracer, tenancy=tenancy)
 
     # ------------------------------------------------------------- internals
 
@@ -356,7 +367,14 @@ class ElasticServingFleet:
         return self._primary_of(req).finish is not None
 
     def _route(self, req: Request, t: int):
-        sid = self.short_policy.select(float(req.gen_len), req.job_id)
+        pol = self.short_policy
+        if self._policy_advance is not None:
+            self._policy_advance(t)  # refill burst-credit buckets to now
+        before = pol.n_throttled if self._policy_throttles else 0
+        sid = pol.select(float(req.gen_len), req.job_id)
+        if (self._policy_throttles and pol.n_throttled > before
+                and self.recorder is not None):
+            self.recorder.emit(t, ev.THROTTLE, replica=sid, rid=req.rid)
         self._by_rid[sid].enqueue(req, t)
 
     def _bring_online(self, t: int) -> _Replica:
@@ -425,15 +443,35 @@ class ElasticServingFleet:
         record_rent(self.recorder, t, delta)
         for _ in range(max(delta, 0)):
             self.pending_online.append(t + self.provisioning_delay)
+        # SLO-debt-aware victim selection (tenancy active): among the
+        # least-loaded candidates, drain the replica whose residents have
+        # the *most* SLO headroom — its tenants can afford the drain lag,
+        # tenants already in debt keep their capacity
+        if self.tenancy is not None:
+            load_key = lambda r: (-self._replica_headroom(r), r.load)  # noqa: E731
+        else:
+            load_key = lambda r: r.load  # noqa: E731
         for _ in range(max(-delta, 0)):
             cands = self._transients()
             if not cands:  # guard: never drain more than remain
                 break
             tr = select_drain(cands,
                               preference=self.spec.drain_preference,
-                              load_key=lambda r: r.load,
+                              load_key=load_key,
                               online_key=lambda r: r.online_at)
             tr.draining = True
+
+    def _replica_headroom(self, r: _Replica) -> float:
+        """Least SLO headroom across the replica's residents and queue —
+        the replica is only as safe to victimize as its worst-off tenant.
+        An idle replica is maximally safe."""
+        ten = self.tenancy
+        h = math.inf
+        for _, d in r.slots.items():
+            h = min(h, ten.headroom(self._primary_of(d.req).tenant_id))
+        for q in r.queue:
+            h = min(h, ten.headroom(self._primary_of(q).tenant_id))
+        return h
 
     def _advance_replica(self, r: _Replica, t: int) -> int:
         """One decode tick for one replica: free slots whose hedged pair
@@ -457,6 +495,8 @@ class ElasticServingFleet:
             prim = self._primary_of(req)
             if prim.start is None:
                 prim.start = t
+                if self.tenancy is not None:
+                    self.tenancy.record_wait(prim.tenant_id, t - prim.arrival)
             # pending_ticks already counts the admitted request
             r.slots.admit(_SlotDecode(req, req.gen_len, t))
             if self.recorder is not None:
@@ -476,9 +516,17 @@ class ElasticServingFleet:
                             self.recorder.emit(t, ev.HEDGE_WIN,
                                                replica=r.rid, rid=prim.rid)
                     if self.tracer is not None:
+                        # tenant as the slice category: Perfetto can then
+                        # filter/color request slices per tenant
+                        prim0 = self._primary_of(d.req)
+                        cat = (self.tenancy.names[prim0.tenant_id
+                                                  % self.tenancy.n_tenants]
+                               if self.tenancy is not None else None)
                         self.tracer.complete(
                             f"req {d.req.rid}", d.admit_t, t + 1 - d.admit_t,
-                            tid=r.rid, args={"gen_len": d.req.gen_len})
+                            tid=r.rid, cat=cat,
+                            args={"gen_len": d.req.gen_len,
+                                  "tenant": prim0.tenant_id})
                     r.slots.release(slot)
         if r.draining and not r.slots.n_active and not r.queue:
             r.offline_at = t
@@ -496,6 +544,7 @@ class ElasticServingFleet:
                    if r.kind == "ondemand" and not r.pinned]
         if not reserve:
             return
+        due: List[Tuple[_Replica, Request]] = []
         for r in self._transients():
             cands = list(r.queue) + [d.req for _, d in r.slots.items()]
             for req in cands:
@@ -505,25 +554,33 @@ class ElasticServingFleet:
                 on_transient = t - (req.routed_at if req.routed_at is not None
                                     else req.arrival)
                 if on_transient > self.hedge_factor * req.gen_len:
-                    # §3.3: duplicate onto the on-demand reserve, first
-                    # completion wins — the original keeps its place here
-                    req.hedged = True
-                    self.n_hedges += 1
-                    copy = Request(req.rid, req.arrival, req.gen_len,
-                                   hedged=True, job_id=req.job_id,
-                                   primary=req)
-                    target = min(reserve, key=lambda x: x.load)
-                    target.enqueue(copy, t)
-                    if self.recorder is not None:
-                        self.recorder.emit(t, ev.HEDGE, replica=target.rid,
-                                           rid=req.rid)
-                    if self.tracer is not None:
-                        # flow arrow from the stuck primary's transient
-                        # lane to the on-demand reserve lane it hedged onto
-                        self.tracer.flow_start("hedge", t,
-                                               fid=self.n_hedges, tid=r.rid)
-                        self.tracer.flow_end("hedge", t, fid=self.n_hedges,
-                                             tid=target.rid)
+                    due.append((r, req))
+        if self.tenancy is not None and len(due) > 1:
+            # SLO-debt-aware hedge order: the tenant deepest in debt gets
+            # the emptiest reserve replica first (stable sort — scan order
+            # breaks ties, so the single-tenant order is preserved)
+            due.sort(key=lambda pair: self.tenancy.headroom(
+                pair[1].tenant_id))
+        for r, req in due:
+            # §3.3: duplicate onto the on-demand reserve, first
+            # completion wins — the original keeps its place here
+            req.hedged = True
+            self.n_hedges += 1
+            copy = Request(req.rid, req.arrival, req.gen_len,
+                           hedged=True, job_id=req.job_id,
+                           tenant_id=req.tenant_id, primary=req)
+            target = min(reserve, key=lambda x: x.load)
+            target.enqueue(copy, t)
+            if self.recorder is not None:
+                self.recorder.emit(t, ev.HEDGE, replica=target.rid,
+                                   rid=req.rid)
+            if self.tracer is not None:
+                # flow arrow from the stuck primary's transient
+                # lane to the on-demand reserve lane it hedged onto
+                self.tracer.flow_start("hedge", t,
+                                       fid=self.n_hedges, tid=r.rid)
+                self.tracer.flow_end("hedge", t, fid=self.n_hedges,
+                                     tid=target.rid)
 
     def _maybe_revoke(self, t: int):
         if self.revocation_mttf <= 0:
@@ -683,7 +740,8 @@ def build_serving_workload(trace, cfg: ServingFleetConfig
             for d in job.durations:
                 requests.append(Request(
                     rid, a, gen_len=max(int(round(d / tick_s)), 1),
-                    job_id=job.job_id))
+                    job_id=job.job_id,
+                    tenant_id=getattr(job, "tenant_id", 0)))
                 rid += 1
     requests.sort(key=lambda q: (q.arrival, q.rid))
     n_dropped = max(len(requests) - cfg.max_requests, 0)

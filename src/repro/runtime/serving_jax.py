@@ -95,6 +95,9 @@ class FleetSpec:
     lifetime_cap: int    # recorded transient lifetimes (sum/count exact)
     drain_code: int      # DRAIN_CODES[drain_preference]
     spot_pricing: bool   # SpotAwareProbing's rework term in the fallback key
+    n_tenants: int = 1   # tenant count is SHAPE (credit vectors, per-tenant
+    #                      accumulators); credit rates/bursts stay traced so
+    #                      a credit-budget sweep reuses one program
 
     @property
     def n_replicas(self) -> int:
@@ -107,7 +110,8 @@ def make_spec(cfg: ServingFleetConfig, *, n_requests: int, max_ticks: int,
               slot_cap: Optional[int] = None,
               queue_cap: Optional[int] = None,
               drain_preference: str = "least_loaded",
-              spot_pricing: bool = False) -> FleetSpec:
+              spot_pricing: bool = False,
+              n_tenants: int = 1) -> FleetSpec:
     """Derive the static spec from a resolved config + workload size.
 
     ``transient_cap`` / ``slot_cap`` must cover the *largest* swept budget /
@@ -136,16 +140,33 @@ def make_spec(cfg: ServingFleetConfig, *, n_requests: int, max_ticks: int,
         hedge_cap=16,
         lifetime_cap=4096,
         drain_code=DRAIN_CODES[drain_preference],
-        spot_pricing=bool(spot_pricing))
+        spot_pricing=bool(spot_pricing),
+        n_tenants=max(int(n_tenants), 1))
 
 
 def make_params(cfg: ServingFleetConfig, *,
                 threshold: Optional[float] = None,
                 max_transient: Optional[int] = None,
-                max_slots: Optional[int] = None) -> Dict[str, np.ndarray]:
-    """The traced (sweepable) parameter bundle for one grid point."""
+                max_slots: Optional[int] = None,
+                n_tenants: int = 1,
+                credit_rate=None,
+                credit_burst=None) -> Dict[str, np.ndarray]:
+    """The traced (sweepable) parameter bundle for one grid point.
+
+    ``credit_rate`` / ``credit_burst`` are per-tenant token-bucket vectors
+    (work-ticks per tick / work-ticks) — scalars broadcast. The default
+    (rate 0, infinite burst) makes the credit gate a no-op: every fallback
+    is funded, so single-tenant runs are bit-identical to the pre-tenancy
+    program."""
     mttf_ticks = (cfg.revocation_mttf / cfg.tick_s
                   if cfg.revocation_mttf else 0.0)
+    n_t = max(int(n_tenants), 1)
+    cr = (np.zeros(n_t, np.float32) if credit_rate is None
+          else np.broadcast_to(np.asarray(credit_rate, np.float32),
+                               (n_t,)).copy())
+    cb = (np.full(n_t, np.inf, np.float32) if credit_burst is None
+          else np.broadcast_to(np.asarray(credit_burst, np.float32),
+                               (n_t,)).copy())
     return {
         "threshold": np.float32(cfg.threshold if threshold is None
                                 else threshold),
@@ -156,6 +177,8 @@ def make_params(cfg: ServingFleetConfig, *,
         "hedge_factor": np.float32(cfg.hedge_factor),
         "revoke_prob": np.float32(1.0 / mttf_ticks if mttf_ticks > 0 else 0.0),
         "spot_mttf": np.float32(mttf_ticks if mttf_ticks > 0 else np.inf),
+        "credit_rate": cr,
+        "credit_burst": cb,
     }
 
 
@@ -171,8 +194,10 @@ def build_consts(spec: FleetSpec, requests: Sequence[Request],
     T, N = spec.horizon, spec.n_requests
     arrival = np.full(N, T, dtype=np.int32)
     gen = np.ones(N, dtype=np.int32)
+    tenant = np.zeros(N, dtype=np.int32)
     arrival[:n] = [q.arrival for q in requests]
     gen[:n] = [q.gen_len for q in requests]
+    tenant[:n] = [q.tenant_id % spec.n_tenants for q in requests]
     if n and np.any(np.diff(arrival[:n]) < 0):
         raise ValueError("requests must be sorted by arrival")
     # per-tick arrival windows: requests are arrival-sorted, so tick t owns
@@ -187,9 +212,9 @@ def build_consts(spec: FleetSpec, requests: Sequence[Request],
     pin = np.zeros(T, dtype=np.int32)
     m = min(T, len(pinned_per_tick))
     pin[:m] = np.asarray(pinned_per_tick[:m], dtype=np.int32)
-    return {"arrival": arrival, "gen": gen, "arr_start": arr_start,
-            "arr_count": arr_count, "pinned_target": pin,
-            "n_real": np.int32(n)}
+    return {"arrival": arrival, "gen": gen, "tenant": tenant,
+            "arr_start": arr_start, "arr_count": arr_count,
+            "pinned_target": pin, "n_real": np.int32(n)}
 
 
 # ------------------------------------------------------------- the simulator
@@ -211,9 +236,12 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
 
     arrival = jnp.asarray(consts["arrival"])
     gen = jnp.asarray(consts["gen"])
+    tenant_c = jnp.asarray(consts["tenant"])
     arr_start = jnp.asarray(consts["arr_start"])
     arr_count = jnp.asarray(consts["arr_count"])
     pin_tgt = jnp.asarray(consts["pinned_target"])
+    NT = spec.n_tenants
+    home_tid = idx_r % NT  # replica rid -> owning tenant's home slice
 
     thr = params["threshold"]
     k_max = params["max_transient"]
@@ -221,6 +249,8 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
     hf = params["hedge_factor"]
     rev_p = params["revoke_prob"]
     spot_mttf = params["spot_mttf"]
+    cred_rate = params["credit_rate"]    # (NT,) refill per tick
+    cred_burst = params["credit_burst"]  # (NT,) bucket depth
     m_slots_f = m_slots.astype(jnp.float32)
     slot_open = jnp.arange(S)[None, :] < m_slots  # (1,S): usable slots
 
@@ -264,8 +294,14 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         (online, draining, online_at, flushing, q_rid, q_head, q_len, pend,
          slot_rid, slot_rem, start, finish, hedged, routed_at, pipe,
          ring, rr_head, rr_len, want_prev, n_hedges, n_hcancel, n_revoke,
-         n_rentals, n_over, lt_buf, lt_count, lt_sum) = carry
+         n_rentals, n_over, lt_buf, lt_count, lt_sum, credits,
+         n_throttle) = carry
         tk = jax.random.fold_in(key, t)
+        # token-bucket refill, one tick's worth, clipped at the bucket
+        # depth — per-tick refill with clip is exactly the Python oracle's
+        # lazy refill (both linear in elapsed time, same ceiling)
+        credits = jnp.minimum(credits + cred_rate, cred_burst)
+        n_thr_pre = n_throttle  # obs: THROTTLE column is the per-tick delta
 
         # ---- 1 · pinning: first `want` on-demand replicas go to long jobs;
         # newly pinned replicas displace slot residents now, queues flush
@@ -340,7 +376,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
 
         def do_route(op):
             (q_rid, q_head, q_len, pend, routed_at, n_over, ring, rr_head,
-             rr_len, ev_rr) = op
+             rr_len, ev_rr, credits, n_throttle) = op
             offs = jnp.arange(W)
             rr_val = offs < jnp.minimum(rr_len, W)
             rr_rid = ring[(rr_head + offs) % RC]
@@ -375,7 +411,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
             # under full pinning — thread the intra-tick load delta through
             # a sequential while_loop bounded by the *actual* entry count
             def choose(state):
-                i, pend_add, chosen = state
+                i, pend_add, chosen, credits, n_thr = state
                 pend_now = (pend + pend_add).astype(jnp.float32) / m_slots_f
                 ek = jax.random.fold_in(route_key, i)
                 # probing: `probe_retries` rounds of `probe_d` uniform draws
@@ -414,28 +450,51 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
                 ll_pin = jnp.argmin(jnp.where(is_ond & pinned, pend_now,
                                               jnp.inf))
                 ll_sid = jnp.where(any_unpin, ll_unpin, ll_pin)
-                sid = jnp.where(has_round, probe_sid,
-                                jnp.where(n_act > 0, fb_sid, ll_sid))
-                bump = jnp.where(e_val[i], gen[e_rid[i]], 0)
+                # TenantGuard credit gate: *every* placement must be
+                # funded by its tenant's bucket (cost = service demand),
+                # so the bucket level tracks offered load against the
+                # tenant's paid rate. Over-credit -> throttle to the
+                # least-loaded unpinned replica of the tenant's *home
+                # slice* of the general partition (rid % n_tenants ==
+                # tenant), confining the spike to the owner's fair
+                # share; no free home replica -> route normally without
+                # a debit (work conservation). The default params
+                # (infinite burst) make `funded` always true, so
+                # single-tenant programs route identically
+                live = e_val[i]
+                te = tenant_c[e_rid[i]]
+                cost = gen[e_rid[i]].astype(jnp.float32)
+                home = is_ond & ~pinned & (home_tid == te)
+                any_home = jnp.any(home)
+                ll_home = jnp.argmin(jnp.where(home, pend_now, jnp.inf))
+                funded = credits[te] >= cost
+                throttled = live & ~funded & any_home
+                normal = jnp.where(has_round, probe_sid,
+                                   jnp.where(n_act > 0, fb_sid, ll_sid))
+                sid = jnp.where(throttled, ll_home, normal)
+                credits = credits.at[te].add(
+                    -jnp.where(live & funded, cost, 0.0))
+                n_thr = n_thr + throttled.astype(jnp.int32)
+                bump = jnp.where(live, gen[e_rid[i]], 0)
                 pend_add = pend_add + jnp.zeros(R, jnp.int32).at[sid].add(
                     bump)
-                return i + 1, pend_add, chosen.at[i].set(sid)
+                return i + 1, pend_add, chosen.at[i].set(sid), credits, n_thr
 
-            _, _, chosen = jax.lax.while_loop(
+            _, _, chosen, credits, n_throttle = jax.lax.while_loop(
                 lambda st: st[0] < n_e, choose,
                 (jnp.int32(0), jnp.zeros(R, jnp.int32),
-                 jnp.zeros(W2, jnp.int32)))
+                 jnp.zeros(W2, jnp.int32), credits, n_throttle))
             st = push_entries((q_rid, q_head, q_len, pend, routed_at,
                                n_over), chosen, e_rid, e_val, t)
             q_rid, q_head, q_len, pend, routed_at, n_over = st
             return (q_rid, q_head, q_len, pend, routed_at, n_over, ring,
-                    rr_head, rr_len, ev_rr)
+                    rr_head, rr_len, ev_rr, credits, n_throttle)
 
         (q_rid, q_head, q_len, pend, routed_at, n_over, ring, rr_head,
-         rr_len, ev_reroute) = jax.lax.cond(
+         rr_len, ev_reroute, credits, n_throttle) = jax.lax.cond(
             (rr_len > 0) | (arr_count[t] > 0), do_route, lambda op: op,
             (q_rid, q_head, q_len, pend, routed_at, n_over, ring, rr_head,
-             rr_len, jnp.int32(0)))
+             rr_len, jnp.int32(0), credits, n_throttle))
 
         # ---- 5 · §3.2 controller: exact leading-true counts over a [0, K]
         # candidate vector (same float comparisons as the Python unit loop)
@@ -574,7 +633,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
 
         def do_admit(op):
             (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-             n_hcancel, ev_ad) = op
+             n_hcancel, ev_ad, tn_ad, tn_wt) = op
             w_rid, w_val = q_window(q_rid, q_head, q_len, P)
             w_val = w_val & act[:, None]
             w_rid = jnp.where(w_val, w_rid, 0)
@@ -608,16 +667,27 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
             srid = jnp.where(has, a_rid, N)
             sg = start[jnp.where(has, a_rid, 0)]
             start = start.at[srid].set(jnp.where(sg < 0, t, sg), mode="drop")
+            # per-tenant first-start accounting: admits + wait-ticks this
+            # tick, scattered by the owning tenant (hedge-copy re-admits
+            # keep their original start, so they don't double count)
+            news = has & (sg < 0)
+            a_safe = jnp.where(has, a_rid, 0)
+            te_a = jnp.where(news, tenant_c[a_safe], NT)
+            tn_ad = tn_ad + jnp.zeros(NT, jnp.int32).at[te_a].add(
+                1, mode="drop")
+            tn_wt = tn_wt + jnp.zeros(NT, jnp.int32).at[te_a].add(
+                jnp.where(news, t - arrival[a_safe], 0), mode="drop")
             q_head = (q_head + consumed) % Q
             q_len = q_len - consumed
             return (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-                    n_hcancel, ev_ad)
+                    n_hcancel, ev_ad, tn_ad, tn_wt)
 
         (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-         n_hcancel, ev_admit) = jax.lax.cond(
+         n_hcancel, ev_admit, tn_admit, tn_wait) = jax.lax.cond(
             jnp.any(act & (q_len > 0)), do_admit, lambda op: op,
             (q_rid, q_head, q_len, pend, slot_rid, slot_rem, start,
-             n_hcancel, jnp.int32(0)))
+             n_hcancel, jnp.int32(0), jnp.zeros(NT, jnp.int32),
+             jnp.zeros(NT, jnp.int32)))
 
         occ = (slot_rid >= 0) & act[:, None]
         busy_r = jnp.sum(occ, axis=1)
@@ -666,6 +736,7 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
             ev_admit,                     # ADMIT
             ev_disp_pin + ev_disp_rev,    # DISPLACE
             ev_reroute,                   # REROUTE
+            n_throttle - n_thr_pre,       # THROTTLE
         ]).astype(jnp.int32)
         # fleet queue depth at end of tick (online replicas only — matches
         # the oracle's tracer counter over replicas with offline_at None)
@@ -679,8 +750,10 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         carry = (online, draining, online_at, flushing, q_rid, q_head, q_len,
                  pend, slot_rid, slot_rem, start, finish, hedged, routed_at,
                  pipe, ring, rr_head, rr_len, want, n_hedges, n_hcancel,
-                 n_revoke, n_rentals, n_over, lt_buf, lt_count, lt_sum)
-        ys = (online_tr, busy, cap, tr_busy, tr_cap, ev_counts, qdepth)
+                 n_revoke, n_rentals, n_over, lt_buf, lt_count, lt_sum,
+                 credits, n_throttle)
+        ys = (online_tr, busy, cap, tr_busy, tr_cap, ev_counts, qdepth,
+              tn_admit, tn_wait)
         return carry, ys
 
     i32 = jnp.int32
@@ -707,13 +780,16 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         jnp.asarray(0, i32),                   # n_overflow
         jnp.zeros(spec.lifetime_cap, jnp.float32),  # lt_buf
         jnp.asarray(0, i32), jnp.asarray(0, i32),   # lt_count, lt_sum
+        jnp.asarray(cred_burst, jnp.float32),       # credits (buckets full)
+        jnp.asarray(0, i32),                        # n_throttle
     )
     carry, ys = jax.lax.scan(step, carry0, jnp.arange(T))
     (online, draining, online_at, flushing, q_rid, q_head, q_len, pend,
      slot_rid, slot_rem, start, finish, hedged, routed_at, pipe, ring,
      rr_head, rr_len, want_prev, n_hedges, n_hcancel, n_revoke, n_rentals,
-     n_over, lt_buf, lt_count, lt_sum) = carry
-    online_tr, busy, cap, tr_busy, tr_cap, ev_counts, qdepth = ys
+     n_over, lt_buf, lt_count, lt_sum, credits, n_throttle) = carry
+    (online_tr, busy, cap, tr_busy, tr_cap, ev_counts, qdepth, tn_admit,
+     tn_wait) = ys
     return {
         "start": start, "finish": finish, "hedged": hedged,
         "active_transients": online_tr, "busy": busy, "cap": cap,
@@ -726,6 +802,8 @@ def _simulate(spec: FleetSpec, params: Dict, consts: Dict, key):
         "final_online_transients": jnp.sum(online & is_tr),
         "final_tr_online": online & is_tr,
         "final_online_at": online_at,
+        "tenant_admits": tn_admit, "tenant_wait_sums": tn_wait,
+        "n_throttled": n_throttle, "final_credits": credits,
     }
 
 
@@ -877,6 +955,7 @@ def summarize(spec: FleetSpec, out: Dict, consts: Dict, tick_s: float
         "transient_slot_occupancy": float(tr_busy.sum()
                                           / max(tr_cap.sum(), 1.0)),
         "n_queue_overflow": float(out["n_overflow"]),
+        "n_throttled": float(out.get("n_throttled", 0)),
     }
     series = {
         "short_waits": waits,
@@ -889,6 +968,17 @@ def summarize(spec: FleetSpec, out: Dict, consts: Dict, tick_s: float
         "event_counts": np.asarray(out["event_counts"], np.int64),
         "queue_depth": np.asarray(out["queue_depth"], float),
     }
+    if spec.n_tenants > 1:
+        # exact per-request (tenant, wait) pairs for the canonical
+        # tenant_waits series — `exp.results` turns them into named
+        # per-tenant metrics with the trace meta's names/SLOs
+        tenant = np.asarray(consts["tenant"])[:n]
+        started = start >= 0
+        series["tenant_waits"] = np.stack(
+            [tenant[started].astype(float),
+             (start[started] - arrival[started]).astype(float) * tick_s],
+            axis=1) if started.any() else np.zeros((0, 2))
+        series["tenant_admits"] = np.asarray(out["tenant_admits"], np.int64)
     return metrics, series
 
 
@@ -897,10 +987,16 @@ def run_workload(cfg: ServingFleetConfig, requests: Sequence[Request],
                  drain_preference: str = "least_loaded",
                  spot_pricing: bool = False, sim_seed: int = 0,
                  spec: Optional[FleetSpec] = None,
-                 queue_cap: Optional[int] = None
+                 queue_cap: Optional[int] = None,
+                 n_tenants: int = 1,
+                 credit_rate=None, credit_burst=None
                  ) -> Tuple[Dict[str, float], Dict[str, np.ndarray],
                             FleetSpec]:
     """One grid point: the ``ElasticServingFleet.run`` analog on device.
+
+    ``n_tenants`` is static (shape of the credit vector and the per-tenant
+    accumulators); ``credit_rate`` / ``credit_burst`` are the traced
+    token-bucket vectors in tick units (see :func:`make_params`).
 
     Returns ``(metrics, series, spec)`` — metrics/series exactly match the
     ``from_serving_fleet`` canonical mapping."""
@@ -910,9 +1006,10 @@ def run_workload(cfg: ServingFleetConfig, requests: Sequence[Request],
         spec = make_spec(cfg, n_requests=len(requests), max_ticks=max_ticks,
                          max_arrivals_per_tick=max_arr, queue_cap=queue_cap,
                          drain_preference=drain_preference,
-                         spot_pricing=spot_pricing)
+                         spot_pricing=spot_pricing, n_tenants=n_tenants)
     consts = build_consts(spec, requests, pinned_per_tick)
-    params = make_params(cfg)
+    params = make_params(cfg, n_tenants=spec.n_tenants,
+                         credit_rate=credit_rate, credit_burst=credit_burst)
     info0 = cache_info()
     fn = get_program(spec)
     fresh = cache_info().misses > info0.misses
@@ -969,6 +1066,8 @@ def sweep_cube(cfg: ServingFleetConfig, requests: Sequence[Request],
     params["max_slots"] = g_m.astype(np.int32)
     for name in ("hedge_factor", "revoke_prob", "spot_mttf"):
         params[name] = np.full(len(grid), base[name], np.float32)
+    for name in ("credit_rate", "credit_burst"):  # (n_points, n_tenants)
+        params[name] = np.tile(base[name][None, :], (len(grid), 1))
     import jax
 
     keys = jax.vmap(_seed_key)(g_seed.astype(np.uint32))

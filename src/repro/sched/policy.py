@@ -12,6 +12,9 @@ The discrete-event engine (``repro.core.engine``) is a thin event loop; the
   * :class:`BurstGuardProbing` — BoPF-inspired burst guard (Le et al. 2019):
     per-class admission control on the short partition so one bursty job
     cannot monopolize the protected servers;
+  * :class:`TenantGuardProbing` — the per-tenant generalization: token-
+    bucket burst credits (``repro.tenancy``) gate the fallback, throttling
+    over-credit tenants to their fair general share;
   * :class:`SpotAwareProbing` — spot/burstable-aware placement (Teylo et
     al. 2020): biases the fallback away from transient servers in
     proportion to the expected rework cost of a revocation.
@@ -67,6 +70,27 @@ class FluidPolicyParams:
     def is_identity(self) -> bool:
         return (self.backlog_partition_share >= 1.0
                 and self.transient_availability >= 1.0)
+
+
+def project_fluid_params(*, backlog_share: float = 1.0,
+                         mttf: float = 0.0, sim_config=None,
+                         ) -> FluidPolicyParams:
+    """The one fluid projection every short policy shares.
+
+    ``backlog_share`` caps the protected partition's standing-backlog
+    drain share (BurstGuard / TenantGuard admission aggregates to this);
+    a positive ``mttf`` discounts transient capacity by the expected
+    availability over one provisioning period (SpotAware), reading the
+    replacement delay off ``sim_config``. Defaults produce the identity
+    (plain Eagle)."""
+    availability = 1.0
+    if mttf > 0:
+        # expected availability of a transient over a provisioning period
+        # (the time lost replacing a revoked server)
+        delay = getattr(sim_config, "provisioning_delay", 120.0)
+        availability = mttf / (mttf + delay)
+    return FluidPolicyParams(backlog_partition_share=backlog_share,
+                             transient_availability=availability)
 
 
 def running_entries(server) -> tuple:
@@ -142,7 +166,7 @@ class ShortPlacementPolicy(PlacementPolicy):
     """
 
     def fluid_params(self, sim_config=None) -> FluidPolicyParams:
-        return FluidPolicyParams()
+        return project_fluid_params()
 
 
 class EagleProbing(ShortPlacementPolicy):
@@ -258,7 +282,97 @@ class BurstGuardProbing(EagleProbing):
         return total >= self.min_backlog and mine > self.guard_frac * total
 
     def fluid_params(self, sim_config=None) -> FluidPolicyParams:
-        return FluidPolicyParams(backlog_partition_share=self.guard_frac)
+        return project_fluid_params(backlog_share=self.guard_frac)
+
+
+class TenantGuardProbing(EagleProbing):
+    """Per-tenant token-bucket admission on the short-only partition
+    (BoPF done properly — the generalization of :class:`BurstGuardProbing`
+    from one aggregate backlog share to per-tenant burst credits).
+
+    Every tenant owns a :class:`repro.tenancy.admission.TokenBucket` that
+    refills at (roughly) the tenant's fair share of short-partition
+    capacity in work per engine time unit. *Every* placement pays the
+    request's service demand from the owning tenant's bucket (tenant =
+    ``job_id % n_tenants``, the encoding the ``multi_tenant`` builder
+    guarantees), so the bucket level tracks offered load relative to the
+    paid rate: a tenant arriving below its credit rate never drains its
+    bucket, while a flash crowd at several times the rate exhausts the
+    ``credit_burst`` depth within seconds of spike onset. A funded
+    request routes like plain Eagle (probe anywhere, fall back to the
+    transient pool); an over-credit tenant is *throttled* — confined to
+    its *home slice* of the general partition
+    (``server_id % n_tenants == tenant``). Confinement is what makes
+    throttling fair rather than merely work-moving: an over-credit spike
+    self-queues on the owner's own 1/n of the static servers instead of
+    spreading across the replicas every other tenant's traffic rides on.
+    Admission stays work-conserving: with no free home-slice server the
+    request routes normally (and nothing is debited).
+
+    The engines drive the bucket clock via :meth:`advance` (guarded
+    ``getattr`` — other policies don't carry one) and read
+    ``n_throttled`` deltas to emit THROTTLE events at the decision site.
+    """
+
+    name = "tenant_guard"
+
+    def __init__(self, tenant_set=None, n_tenants: int = 1,
+                 credit_rate=1.0, credit_burst=300.0,
+                 guard_frac: float = 0.5):
+        from repro.tenancy import TenantCredits, get_tenant_set
+
+        if tenant_set is not None:
+            ts = get_tenant_set(tenant_set) if isinstance(tenant_set, str) \
+                else tenant_set
+            n_tenants = ts.n_tenants
+            credit_rate = ts.credit_rates()
+            credit_burst = ts.credit_bursts()
+        self.n_tenants = int(n_tenants)
+        rates = self._vec(credit_rate)
+        bursts = self._vec(credit_burst)
+        self.credits = TenantCredits(rates, bursts)
+        self.guard_frac = guard_frac
+        self.n_throttled = 0
+
+    def _vec(self, v):
+        if isinstance(v, (int, float)):
+            return [float(v)] * self.n_tenants
+        out = [float(x) for x in v]
+        if len(out) != self.n_tenants:
+            raise ValueError(f"expected {self.n_tenants} per-tenant values, "
+                             f"got {len(out)}")
+        return out
+
+    def advance(self, t: float) -> None:
+        """Refill every tenant's bucket up to engine time ``t``."""
+        self.credits.advance(t)
+
+    def scale_costs(self, cost_scale: float) -> "TenantGuardProbing":
+        """Move the buckets into a different cost unit (work-seconds ->
+        work-ticks: ``cost_scale = 1 / tick_s``). Refill rates are work
+        per unit *time* and both units rescale together, so only the
+        depths change. Resets the buckets (call before a run starts)."""
+        from repro.tenancy import TenantCredits
+
+        self.credits = TenantCredits(
+            [b.rate for b in self.credits.buckets],
+            [b.burst * cost_scale for b in self.credits.buckets])
+        return self
+
+    def select(self, dur: float, job_id: int) -> int:
+        tid = job_id % self.n_tenants
+        if not self.credits.try_spend(tid, dur):
+            c = self._cluster
+            home = [sid for sid in c.general_ids
+                    if sid % self.n_tenants == tid
+                    and not c.servers[sid].long_occupied]
+            if home:
+                self.n_throttled += 1
+                return min(home, key=lambda sid: c.servers[sid].pending_work)
+        return super().select(dur, job_id)
+
+    def fluid_params(self, sim_config=None) -> FluidPolicyParams:
+        return project_fluid_params(backlog_share=self.guard_frac)
 
 
 class SpotAwareProbing(EagleProbing):
@@ -302,17 +416,13 @@ class SpotAwareProbing(EagleProbing):
     def fluid_params(self, sim_config=None) -> FluidPolicyParams:
         mttf = self.mttf_override or getattr(sim_config, "revocation_mttf",
                                              0.0)
-        if mttf <= 0:
-            return FluidPolicyParams()
-        # expected availability of a transient over a provisioning period
-        # (the time lost replacing a revoked server)
-        delay = getattr(sim_config, "provisioning_delay", 120.0)
-        return FluidPolicyParams(transient_availability=mttf / (mttf + delay))
+        return project_fluid_params(mttf=mttf, sim_config=sim_config)
 
 
 SHORT_POLICIES: Dict[str, Type[ShortPlacementPolicy]] = {
     EagleProbing.name: EagleProbing,
     BurstGuardProbing.name: BurstGuardProbing,
+    TenantGuardProbing.name: TenantGuardProbing,
     SpotAwareProbing.name: SpotAwareProbing,
 }
 

@@ -1,3 +1,3 @@
 from repro.traces.synthetic import google_like, yahoo_like  # noqa: F401
 from repro.workload.builders import (diurnal_like, flash_crowd_like,  # noqa: F401
-                                     poisson_like)
+                                     multi_tenant, poisson_like)

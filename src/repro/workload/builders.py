@@ -181,3 +181,71 @@ def poisson_like(seed=0, n_servers=4000, n_short=80, horizon=24 * 3600.0,
     })
     tr.meta["utilization"] = tr.utilization(n_servers)
     return tr
+
+
+# ------------------------------------------------------------- multi-tenant
+
+@register_builder
+def multi_tenant(seed=0, n_servers=4000, n_short=80, horizon=24 * 3600.0,
+                 tenant_set="trio", long_util=0.9, short_util=0.6) -> Trace:
+    """Superposition of per-tenant traces (``repro.tenancy``).
+
+    Each tenant in the set gets its ``rate_share`` of the aggregate
+    calibrated rate, shaped by its own arrival process and job mix, drawn
+    from an *independent* RNG stream (``default_rng([seed, tenant_id])``)
+    — so adding a tenant never perturbs another tenant's jobs. The merged
+    trace is sorted by arrival and renumbered so that
+
+        ``job_id % n_tenants == tenant_id``
+
+    (``job_id = per_tenant_index * n_tenants + tenant_id``): every engine
+    — including the jitted ``serving_jax`` scan, where a side table would
+    be a dynamic lookup — recovers the owning tenant from the id alone.
+    ``Job.tenant_id`` is stamped too; single-tenant builders leave it at
+    the default 0.
+
+    The aggregate rate solves the same legacy calibration equation as
+    ``yahoo_like`` against the share-weighted mean work per job, so the
+    fleet-level load matches the single-tenant presets.
+    """
+    from repro.tenancy import get_tenant_set
+
+    ts = get_tenant_set(tenant_set) if isinstance(tenant_set, str) \
+        else tenant_set
+    shares = ts.shares()
+    mixes = [t.job_mix() for t in ts.tenants]
+    n_general = n_servers - n_short
+    target_work = (long_util * n_general + short_util * n_short) * horizon
+    mean_work = sum(s * m.mean_work_per_job() for s, m in zip(shares, mixes))
+    rate = target_work / mean_work / horizon
+
+    tagged = []  # (arrival, tenant_id, per_tenant_index, job)
+    for tid, (spec, share, mix) in enumerate(zip(ts.tenants, shares, mixes)):
+        # normalize to the share's exact mean rate: spiky processes (flash
+        # crowd) have mean_rate > their base-rate parameter, and every
+        # registered process is linear in it, so one probe calibrates
+        probe = spec.arrival_process(1.0)
+        scale = rate * share / max(probe.mean_rate(horizon), 1e-12)
+        proc = spec.arrival_process(scale)
+        sub = build_trace(proc, mix, seed=[seed, tid], horizon=horizon)
+        for j in sub.jobs:
+            tagged.append((j.arrival, tid, j.job_id, j))
+    tagged.sort(key=lambda rec: (rec[0], rec[1], rec[2]))
+    counters = [0] * ts.n_tenants
+    jobs = []
+    for _, tid, _, j in tagged:
+        j.job_id = counters[tid] * ts.n_tenants + tid
+        j.tenant_id = tid
+        counters[tid] += 1
+        jobs.append(j)
+    tr = Trace(jobs, horizon, meta={
+        "kind": "multi_tenant", "seed": seed, "n_servers": n_servers,
+        "tenant_set": ts.name, "tenants": list(ts.names),
+        "tenant_shares": [float(s) for s in shares],
+        "tenant_slo_s": [float(s) for s in ts.slo_targets_s()],
+        "tenant_credit_rate": [float(r) for r in ts.credit_rates()],
+        "tenant_credit_burst": [float(b) for b in ts.credit_bursts()],
+        "tenant_n_jobs": counters,
+    })
+    tr.meta["utilization"] = tr.utilization(n_servers)
+    return tr

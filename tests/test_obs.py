@@ -29,7 +29,8 @@ import pytest
 from repro.exp import (CANONICAL_METRICS, REQUIRED_SERIES, RunResult,
                        validate_run_result)
 from repro.obs import (ADMIT, DRAIN, EVENT_TYPES, HEDGE, HEDGE_WIN,
-                       PROVISION, RENT, EventRecorder, MetricsRegistry,
+                       PROVISION, RENT, THROTTLE, EventRecorder,
+                       MetricsRegistry,
                        Tracer, check_replica_lifecycles,
                        check_transient_conservation, diff_event_streams,
                        events_from_counts, timed, trace_from_run_result,
@@ -44,10 +45,13 @@ from repro.runtime.serving import (ElasticServingFleet, Request,
 def test_event_type_order_is_the_on_disk_schema():
     # column order is load-bearing: serving_jax emits its per-tick event
     # vector in exactly this order, and persisted event_counts series
-    # decode against it — append-only, never reorder
+    # decode against it — append-only, never reorder. THROTTLE is the
+    # tenth column (PR 8's nine->ten migration): event_counts arrays
+    # persisted before it decode fine because columns only appended
     assert EVENT_TYPES == ("RENT", "PROVISION", "DRAIN", "REVOKE", "HEDGE",
-                           "HEDGE_WIN", "ADMIT", "DISPLACE", "REROUTE")
-    assert (RENT, PROVISION, DRAIN, ADMIT) == (0, 1, 2, 6)
+                           "HEDGE_WIN", "ADMIT", "DISPLACE", "REROUTE",
+                           "THROTTLE")
+    assert (RENT, PROVISION, DRAIN, ADMIT, THROTTLE) == (0, 1, 2, 6, 9)
 
 
 def test_recorder_counts_roundtrip():
@@ -146,6 +150,42 @@ def test_serving_vs_jax_event_streams_identical(case):
             log, n_online_end=n_online,
             n_pending_end=len(fleet.pending_online), horizon=T) == []
     assert check_replica_lifecycles(rec) == []
+
+
+def test_serving_vs_jax_throttle_events_identical():
+    # two tenants on the deterministic one-replica fleet: tenant 0's bucket
+    # holds 5 work units and never refills, tenant 1's is effectively
+    # bottomless. Tenant 0's third request is the first over-credit
+    # placement, so both engines must emit THROTTLE on the same ticks —
+    # the tenth event column is part of the cross-engine contract
+    from repro.sched.policy import TenantGuardProbing
+
+    cfg = ServingFleetConfig(n_replicas=1, max_transient=1, threshold=0.5,
+                             provisioning_delay=3.0, tick_s=1.0)
+    T = 40
+    pin = np.zeros(T, int)
+    pin[20:30] = 1
+    rate, burst = [0.0, 0.0], [5.0, 1e9]
+
+    def mk_reqs():
+        return [Request(i, a, g, job_id=i, tenant_id=i % 2)
+                for i, (a, g) in enumerate(
+                    [(0, 3), (1, 2), (4, 2), (6, 3), (8, 2), (12, 3),
+                     (22, 2), (24, 1), (31, 2), (33, 1)])]
+
+    rec = EventRecorder()
+    pol = TenantGuardProbing(n_tenants=2, credit_rate=rate,
+                             credit_burst=burst)
+    fleet = ElasticServingFleet.from_config(cfg, seed=0, recorder=rec,
+                                            short_policy=pol)
+    fleet.run(mk_reqs(), lambda t: int(pin[t]), T)
+    _, series, _ = sj.run_workload(cfg, mk_reqs(), pin, T, sim_seed=0,
+                                   n_tenants=2, credit_rate=rate,
+                                   credit_burst=burst)
+    assert pol.n_throttled > 0  # the gate actually fired
+    diff = diff_event_streams(rec.counts(T), series["event_counts"])
+    assert diff == [], diff
+    assert int(series["event_counts"][:, THROTTLE].sum()) == pol.n_throttled
 
 
 @pytest.mark.parametrize("seed", [0, 3])

@@ -1,0 +1,197 @@
+"""Multi-tenant layer tests (``repro.tenancy``): token-bucket conservation,
+single-tenant inertness (the tenant machinery must not perturb existing
+presets), and cross-engine agreement of the per-tenant SLO metrics.
+
+  * conservation property: over arbitrary advance/spend histories,
+    ``granted == spent + residual`` exactly — the bucket neither mints
+    nor leaks credits;
+  * inertness: with the default (infinite-burst) credit params the
+    TenantGuard gate is funded on every placement, so single-tenant
+    programs route bit-identically on both serving engines;
+  * agreement: the ``serve_tenant_trio`` preset's per-tenant p99 wait and
+    SLO attainment agree between the Python serving oracle and the jitted
+    JAX engine within 5% when averaged over seeds (single-seed tails are
+    order statistics over ~10^2 requests and intrinsically noisy).
+"""
+
+import numpy as np
+import pytest
+
+from repro.exp import run as exp_run
+from repro.exp.results import validate_run_result
+from repro.runtime import serving_jax as sj
+from repro.runtime.serving import Request, ServingFleetConfig
+from repro.tenancy import (TenancyState, TenantCredits, TokenBucket,
+                           get_tenant_set)
+
+# ------------------------------------------------------ bucket conservation
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_token_bucket_conservation_property(seed):
+    rng = np.random.default_rng(1000 + seed)
+    rate = float(rng.uniform(0.1, 5.0))
+    burst = float(rng.uniform(1.0, 50.0))
+    b = TokenBucket(rate, burst)
+    t = 0.0
+    granted_checks = 0
+    for _ in range(500):
+        op = rng.integers(0, 3)
+        if op == 0:
+            t += float(rng.exponential(2.0))
+            b.advance(t)
+        elif op == 1:
+            b.advance(t - float(rng.uniform(0.0, 5.0)))  # backwards: no-op
+        else:
+            b.try_spend(float(rng.uniform(0.0, burst * 0.7)))
+        # the invariant is exact, not approximate: every granted credit is
+        # either spent or residual, and the balance never exceeds depth
+        assert b.granted == pytest.approx(b.spent + b.residual, abs=1e-9)
+        assert b.tokens <= burst + 1e-9
+        granted_checks += 1
+    assert granted_checks == 500
+    assert b.granted >= burst  # initial fill counted
+
+
+def test_token_bucket_starts_full_and_denies_overdraft():
+    b = TokenBucket(1.0, 10.0)
+    assert b.try_spend(10.0)          # whole initial fill
+    assert not b.try_spend(0.5)       # empty now
+    b.advance(3.0)
+    assert b.residual == pytest.approx(3.0)
+    assert not b.try_spend(3.5)
+    assert b.try_spend(3.0)
+    assert b.granted == pytest.approx(b.spent + b.residual)
+
+
+def test_tenant_credits_vector_and_modulo():
+    tc = TenantCredits([1.0, 2.0], [5.0, 5.0])
+    assert len(tc) == 2
+    assert tc.try_spend(3, 4.0)       # 3 % 2 == 1
+    assert tc.balances() == (5.0, 1.0)
+    with pytest.raises(ValueError):
+        TenantCredits([1.0], [1.0, 2.0])
+
+
+def test_tenancy_state_headroom_signal():
+    st = TenancyState(["a", "b"], [100.0, 10.0])
+    st.record_wait(1, 200.0)
+    assert st.headroom(None) == float("inf")
+    assert st.headroom(0) == pytest.approx(100.0)
+    assert st.headroom(1) < 10.0      # ewma moved toward the deep wait
+    assert [len(w) for w in st.waits] == [0, 1]
+
+
+# ------------------------------------------------- single-tenant inertness
+
+
+def _yahoo_like_requests():
+    """A deterministic single-tenant request stream + pin schedule."""
+    rng = np.random.default_rng(7)
+    T, n = 300, 60
+    arr = np.sort(rng.integers(0, T - 30, n))
+    reqs = [Request(i, int(arr[i]), int(rng.integers(1, 6)), job_id=i)
+            for i in range(n)]
+    pin = np.zeros(T, int)
+    pin[40:120] = 2
+    return reqs, pin, T
+
+
+def test_jax_default_credit_gate_is_inert():
+    # the tenant machinery rides in the scan carry unconditionally; with
+    # the default params (rate 0, infinite burst) every placement is
+    # funded, so routing — and therefore every metric and the first nine
+    # event columns — must be bit-identical to a 3-tenant program with
+    # bottomless credits over the same single-tenant request stream
+    cfg = ServingFleetConfig(n_replicas=3, max_transient=2, threshold=0.5,
+                             provisioning_delay=3.0, tick_s=1.0)
+    reqs, pin, T = _yahoo_like_requests()
+    m0, s0, _ = sj.run_workload(cfg, list(reqs), pin, T, sim_seed=0)
+    reqs2 = [Request(q.rid, q.arrival, q.gen_len, job_id=q.job_id)
+             for q in reqs]
+    m1, s1, _ = sj.run_workload(cfg, reqs2, pin, T, sim_seed=0,
+                                n_tenants=3,
+                                credit_rate=[0.0, 0.0, 0.0],
+                                credit_burst=[np.inf] * 3)
+    for k, v in m0.items():
+        assert m1[k] == v, k
+    assert m1["n_throttled"] == 0.0
+    assert np.array_equal(s0["event_counts"][:, :9],
+                          s1["event_counts"][:, :9])
+    assert int(s1["event_counts"][:, 9].sum()) == 0
+
+
+def test_tenant_guard_with_bottomless_credits_matches_eagle():
+    # funded TenantGuard delegates straight to Eagle probing, consuming
+    # no extra randomness — identical placements, identical waits
+    from repro.obs import EventRecorder
+    from repro.runtime.serving import ElasticServingFleet
+    from repro.sched.policy import TenantGuardProbing
+
+    cfg = ServingFleetConfig(n_replicas=3, max_transient=2, threshold=0.5,
+                             provisioning_delay=3.0, tick_s=1.0)
+    reqs, pin, T = _yahoo_like_requests()
+
+    def waits(policy):
+        rs = [Request(q.rid, q.arrival, q.gen_len, job_id=q.job_id)
+              for q in reqs]
+        rec = EventRecorder()
+        fleet = ElasticServingFleet.from_config(cfg, seed=0, recorder=rec,
+                                                short_policy=policy)
+        fleet.run(rs, lambda t: int(pin[t]) if t < len(pin) else 0, T)
+        return [q.wait for q in rs if q.wait is not None], rec
+
+    w_eagle, _ = waits(None)  # defaults to EagleProbing
+    pol = TenantGuardProbing(n_tenants=3, credit_rate=0.0,
+                             credit_burst=float("inf"))
+    w_tg, rec = waits(pol)
+    assert w_tg == w_eagle
+    assert pol.n_throttled == 0
+    assert rec.type_counts().get("THROTTLE", 0) == 0
+
+
+def test_single_tenant_run_has_no_tenant_metrics():
+    rr = exp_run("serve_yahoo", engine="serving", quick=True, seed=42)
+    assert validate_run_result(rr) == []
+    assert not any(k.startswith("tenant") for k in rr.metrics)
+    assert "tenant_waits" not in rr.series
+    assert "tenants" not in rr.meta
+
+
+# --------------------------------------------------- cross-engine agreement
+
+_AGREE_SEEDS = tuple(range(41, 53))
+_TENANTS = ("steady", "bursty", "heavytail")
+
+
+def test_serving_vs_jax_per_tenant_metrics_agree():
+    keys = [f"tenant/{n}/{m}" for n in _TENANTS
+            for m in ("p99_wait_s", "slo_attainment")] + ["n_throttled"]
+    acc = {k: {"serving": [], "serving_jax": []} for k in keys}
+    for seed in _AGREE_SEEDS:
+        for eng in ("serving", "serving_jax"):
+            rr = exp_run("serve_tenant_trio", engine=eng, quick=True,
+                         seed=seed)
+            assert validate_run_result(rr) == []
+            for k in keys:
+                acc[k][eng].append(rr.metrics[k])
+    for k in keys:
+        a = float(np.mean(acc[k]["serving"]))
+        b = float(np.mean(acc[k]["serving_jax"]))
+        rel = abs(a - b) / max(abs(a), 1e-9)
+        assert rel <= 0.05, (k, a, b, rel)
+
+
+def test_multi_tenant_run_result_schema():
+    ts = get_tenant_set("trio")
+    for eng in ("des", "serving", "serving_jax"):
+        rr = exp_run("serve_tenant_trio", engine=eng, quick=True, seed=42)
+        assert validate_run_result(rr) == []
+        for name in ts.names:
+            assert 0.0 <= rr.metrics[f"tenant/{name}/slo_attainment"] <= 1.0
+            assert rr.metrics[f"tenant/{name}/p99_wait_s"] >= 0.0
+        assert 0.0 < rr.metrics["tenant_jain_fairness"] <= 1.0
+        tw = rr.series["tenant_waits"]
+        assert tw.ndim == 2 and tw.shape[1] == 2
+        assert set(np.unique(tw[:, 0])) <= {0.0, 1.0, 2.0}
+        assert rr.meta["tenants"] == list(ts.names)
