@@ -38,17 +38,17 @@ def batch_generation_demo(horizon: float) -> dict:
     proc = google_arrivals()
     seeds = np.arange(BATCH_SEEDS)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     serial = np.stack([slot_counts(proc.sample(int(s), horizon), horizon,
                                    BATCH_DT) for s in seeds])
-    t_serial = time.time() - t0
+    t_serial = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     batch = batch_sample_counts(proc, seeds, horizon, dt=BATCH_DT)
-    t_first = time.time() - t0  # includes jit compile
-    t0 = time.time()
+    t_first = time.perf_counter() - t0  # includes jit compile
+    t0 = time.perf_counter()
     batch = batch_sample_counts(proc, seeds, horizon, dt=BATCH_DT)
-    t_batch = max(time.time() - t0, 1e-9)
+    t_batch = max(time.perf_counter() - t0, 1e-9)
 
     # the two samplers draw different randomness; agreement is statistical
     mean_serial = serial.mean() / BATCH_DT
@@ -67,13 +67,13 @@ def batch_generation_demo(horizon: float) -> dict:
 
 
 def run(quick: bool = False):
-    t0 = time.time()
+    t0 = time.perf_counter()
     horizon = 6 * 3600.0 if quick else 24 * 3600.0
     tr = cached_trace(google_like, TRACE_CACHE, seed=3, n_servers=4000,
                       horizon=horizon)
     stats = concurrency_stats(tr, bin_s=100.0, window_s=4 * 3600.0)
     stats["batch_generation"] = batch_generation_demo(horizon)
-    stats["elapsed_s"] = time.time() - t0
+    stats["elapsed_s"] = time.perf_counter() - t0
     return stats
 
 

@@ -26,7 +26,7 @@ SCENARIOS = ("eagle", "coaster_r1", "coaster_r2", "coaster_r3")
 
 
 def run(quick: bool = False) -> Dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     out: Dict = {"paper": PAPER, "variants": {}}
     for label, tkw in (
             ("default_bursts", {}),
@@ -45,7 +45,7 @@ def run(quick: bool = False) -> Dict:
         rows["max_improvement_x"] = (b["short_max_wait_s"]
                                      / max(c3["short_max_wait_s"], 1e-9))
         out["variants"][label] = rows
-    out["elapsed_s"] = time.time() - t0
+    out["elapsed_s"] = time.perf_counter() - t0
     return out
 
 

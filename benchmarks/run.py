@@ -119,9 +119,9 @@ def main() -> None:
     for name, fn in benches.items():
         if name not in only:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = fn(quick=args.quick)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         (ART / f"{name}.json").write_text(json.dumps(res, indent=1, default=float))
         print(f"{name},{dt:.1f},{_derived(name, res)}", flush=True)
 

@@ -20,7 +20,7 @@ from repro.sched import get_scenario
 
 
 def run(quick: bool = False) -> Dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     n_sr = get_scenario("coaster_r3").sim_config(quick=quick).n_short_reserved
     thresholds = np.linspace(0.85, 0.99, 8)
     budgets = np.linspace(0, 3 * n_sr, 7)  # up to the all-replaced r=3 budget
@@ -45,7 +45,7 @@ def run(quick: bool = False) -> Dict:
         "best_delay_s": best["short_avg_wait_s"],
         "paper_threshold_delay_s": float(delays[i_p5, i_t95, -1]),
         "n_grid_points": int(delays.size),
-        "elapsed_s": time.time() - t0,
+        "elapsed_s": time.perf_counter() - t0,
     }
 
 

@@ -66,7 +66,11 @@ class Override:
 
 
 #: name -> Override; the single source of truth for experiment knobs shared
-#: by ``repro.launch.sim`` flags, ``run(overrides=...)`` and DES sweep axes
+#: by ``repro.launch.sim`` flags, ``run(overrides=...)`` and DES sweep axes.
+#: ``repro.analysis`` harvests these names (aliases + sim_keys) as traced
+#: sweep params: the static-shape lint rule fails CI if any of them ever
+#: becomes a ``FleetSpec`` field, and the registry-parity rule checks every
+#: ``sim_key``/``trace_key`` still names a real config field / builder kwarg
 OVERRIDE_SPEC: Dict[str, Override] = {
     "servers": Override(trace_key="n_servers", sim_key="n_servers", type=int,
                         help="cluster size (trace + sim)"),

@@ -132,13 +132,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, layout=None,
         arch, shape_name, mesh, layout=layout, overrides=overrides)
     meta["mesh"] = "multi" if multi_pod else "single"
     meta["n_devices"] = mesh.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh, use_sharding_ctx(mesh, rules):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
     meta["t_lower_s"] = round(t_lower, 2)
     meta["t_compile_s"] = round(t_compile, 2)
 

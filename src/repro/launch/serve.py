@@ -85,7 +85,7 @@ def main():
     step = jax.jit(lambda c, t, pos: model.decode_step(params, c, tokens=t, pos=pos))
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     pos0 = P + (cfg.prefix_len if cfg.family == "vlm" else 0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     outs = []
     for i in range(G):
         if cfg.family == "audio":
@@ -96,7 +96,7 @@ def main():
             logits, cache = step(cache, tok, jnp.int32(pos0 + i))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         outs.append(np.asarray(tok[:, 0]))
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"arch={args.arch} smoke={args.smoke} batch={B} prompt={P} gen={G}")
     print(f"decode throughput: {B * G / dt:.1f} tok/s ({dt/G*1e3:.1f} ms/step)")
     print("sample continuation (seq 0):", [int(o[0]) for o in outs[:16]])

@@ -29,7 +29,11 @@ produce exactly.
 Adding an event type: append the name to :data:`EVENT_TYPES` (never
 reorder — the column index is the on-disk schema), emit it from the Python
 engines, add the matching per-tick count to ``serving_jax._simulate``'s
-``ys`` event vector, and extend the cross-engine test in tests/test_obs.py.
+``ys`` event vector, extend the cross-engine test in tests/test_obs.py,
+and regenerate the schema lock with ``python -m repro.analysis.lint
+--update-locks`` — the schema-drift lint rule gates CI on the lock, the
+``ev_counts`` column arity, and Python-engine emit coverage, so skipping
+any of these steps fails the build by name.
 """
 
 from __future__ import annotations

@@ -16,6 +16,8 @@ import hashlib
 import inspect
 import json
 import pathlib
+import warnings
+import zipfile
 from typing import Callable, Union
 
 import numpy as np
@@ -89,7 +91,13 @@ def cached_trace(builder: Callable[..., Trace],
     if path.exists():
         try:
             return load_trace(path)
-        except Exception:
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as exc:
+            # BadZipFile covers a truncated .npz (np.load opens it as a
+            # zip archive); anything outside this set is a real bug and
+            # should crash, not silently regenerate
+            warnings.warn(f"corrupt trace cache {path}: "
+                          f"{type(exc).__name__}: {exc} — rebuilding",
+                          stacklevel=2)
             path.unlink(missing_ok=True)
     tr = builder(**params)
     save_trace(path, tr)

@@ -75,6 +75,31 @@ def test_events_from_counts_rejects_bad_shape():
         events_from_counts(np.zeros((5, 3)))
 
 
+def test_empty_recorder_counts_zero_events():
+    # a run that never emits: counts must be an all-zero (T, N) array and
+    # reconstruct to an empty log, not crash on the empty event list
+    rec = EventRecorder()
+    counts = rec.counts(5)
+    assert counts.shape == (5, len(EVENT_TYPES))
+    assert int(counts.sum()) == 0
+    back = events_from_counts(counts)
+    assert len(back) == 0 and back.events == []
+    assert diff_event_streams(rec, back, horizon=5) == []
+
+
+def test_zero_tick_run_counts_and_decode():
+    # horizon 0 (a zero-tick run) is a legal degenerate: (0, N) counts,
+    # zero decoded events, and events at t>=horizon are dropped
+    rec = EventRecorder()
+    rec.emit(0, RENT)  # at/after horizon 0 -> dropped by counts(0)
+    counts = rec.counts(0)
+    assert counts.shape == (0, len(EVENT_TYPES))
+    back = events_from_counts(counts)
+    assert len(back) == 0
+    assert back.type_counts() == {name: 0 for name in EVENT_TYPES}
+    assert events_from_counts(np.zeros((0, len(EVENT_TYPES)))).events == []
+
+
 def test_conservation_and_lifecycle_checks_flag_violations():
     rec = EventRecorder()
     rec.emit(0, PROVISION, replica=1)  # PROVISION without RENT
