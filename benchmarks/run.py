@@ -12,6 +12,9 @@ artifacts/bench/.
   serving_scale — serving-engine throughput: Python tick loop vs the
             jitted JAX fleet (engine="serving_jax"), single runs and the
             one-device-program sweep cube
+  decode_scale — real-model decode data plane: dense vs paged KV cache
+            (token parity, tokens/s, resident-slot capacity at a fixed
+            block budget, int8 KV error/bytes)
   fairness_frontier — multi-tenant burstiness-fairness frontier: TenantGuard
             credit-budget ladder vs Eagle / BurstGuard at equal paid
             transient budget (serve_tenant_trio preset)
@@ -30,9 +33,10 @@ import json
 import pathlib
 import time
 
-from benchmarks import (calibration, fairness_frontier, fig1_burstiness,
-                        fig3_queueing_cdf, roofline, serving_delay,
-                        serving_scale, sweep_jax, table1_lifetimes)
+from benchmarks import (calibration, decode_scale, fairness_frontier,
+                        fig1_burstiness, fig3_queueing_cdf, roofline,
+                        serving_delay, serving_scale, sweep_jax,
+                        table1_lifetimes)
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -75,6 +79,15 @@ def _derived(name: str, res: dict) -> str:
                 f"{res['cube']['n_points']}pts "
                 f"{res['cube']['req_per_s']:.0f} req/s | "
                 f"agree={res['agreement']['avg_wait_rel_err']:.1%}")
+    if name == "decode_scale":
+        c, t = res["capacity"], res["throughput"]
+        return (f"parity={res['parity']['tokens_match']:.0f} | "
+                f"dense={t['dense_tok_s']:.0f} paged={t['paged_tok_s']:.0f} "
+                f"tok/s ({t['paged_over_dense']:.2f}x) | slots "
+                f"{c['dense_max_slots']}->{c['paged_peak_resident']} "
+                f"({c['max_slots_ratio']:.1f}x) @ {c['pool_pages']}pg | "
+                f"int8 err={res['int8']['max_abs_err']:.3f} "
+                f"bytes={res['int8']['bytes_ratio']:.1f}x")
     if name == "fairness_frontier":
         e, b = res["eagle"], res["frontier"][-1]
         return (f"steady SLO: eagle={res['steady_slo_attainment_eagle']:.2f} "
@@ -108,6 +121,7 @@ def main() -> None:
         "sweep": sweep_jax.run,
         "serving": serving_delay.run,
         "serving_scale": serving_scale.run,
+        "decode_scale": decode_scale.run,
         "fairness_frontier": fairness_frontier.run,
         "calibration": calibration.run,
         "roofline": roofline.run,

@@ -1,1 +1,2 @@
-from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import (decode_attention,  # noqa: F401
+                                                paged_decode_attention)

@@ -28,3 +28,38 @@ def decode_attention_ref(q, k, v, bias, *, softcap=0.0):
     o = jnp.einsum("bkgl,bklh->bkgh", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
     return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, bias, *,
+                               k_scale=None, v_scale=None, softcap=0.0):
+    """Pure-jnp oracle for the paged kernel: gather the per-sequence cache
+    through the page table, (optionally) dequantize int8 pools, then run the
+    same masked softmax-attention as ``decode_attention_ref`` with a
+    per-sequence bias.
+
+    q: (B,H,hd); k_pages/v_pages: (n_phys, bs, KV, hd); page_table: (B,P)
+    int32; bias: (B, P*bs) f32; k_scale/v_scale: (n_phys, bs, KV, 1) f32.
+    """
+    B, H, hd = q.shape
+    n_phys, bs, KV, _ = k_pages.shape
+    P = page_table.shape[1]
+    L = P * bs
+    k = k_pages[page_table]  # (B, P, bs, KV, hd)
+    v = v_pages[page_table]
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[page_table]
+        v = v.astype(jnp.float32) * v_scale[page_table]
+    k = k.reshape(B, L, KV, hd)
+    v = v.reshape(B, L, KV, hd)
+    G = H // KV
+    scale = hd**-0.5
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,blkh->bkgl", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkh->bkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -328,6 +328,32 @@ def init_cache_entry(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int
     }
 
 
+def init_paged_entry(cfg: ModelConfig, spec: LayerSpec, n_phys_blocks: int,
+                     block_size: int, quant: Optional[str] = None):
+    """One layer's paged KV pool: a shared pool of ``n_phys_blocks`` blocks of
+    ``block_size`` positions each (repro.runtime.paging owns the block ids).
+
+    Logical cache slot ``s`` of a sequence lives at physical block
+    ``page_table[s // block_size]``, offset ``s % block_size`` — the same
+    ``slot = pos % L`` rolling invariant as the dense cache, just indirected
+    through the table. ``pos`` is stored per (block, offset) so gathering a
+    table row reproduces a dense cache entry bit-for-bit (NULL-block tail
+    included: zeros with pos=-1). ``quant="int8"`` stores K/V int8 with
+    rowwise (over hd) f32 scales (optim.compress.quantize_int8 layout).
+    """
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.int8 if quant == "int8" else jnp.dtype(cfg.dtype)
+    entry = {
+        "k": jnp.zeros((n_phys_blocks, block_size, KV, hd), dt),
+        "v": jnp.zeros((n_phys_blocks, block_size, KV, hd), dt),
+        "pos": jnp.full((n_phys_blocks, block_size), -1, jnp.int32),
+    }
+    if quant == "int8":
+        entry["k_scale"] = jnp.zeros((n_phys_blocks, block_size, KV, 1), jnp.float32)
+        entry["v_scale"] = jnp.zeros((n_phys_blocks, block_size, KV, 1), jnp.float32)
+    return entry
+
+
 # ---------------------------------------------------------------------------
 # layer entry points (x is already normed; residual handled by caller)
 
@@ -345,12 +371,21 @@ def attn_train(p, x, cfg: ModelConfig, spec: LayerSpec, positions):
     return _out(p, o, cfg)
 
 
-def attn_prefill(p, x, cfg: ModelConfig, spec: LayerSpec, positions, max_len=None):
+def attn_prefill(p, x, cfg: ModelConfig, spec: LayerSpec, positions, max_len=None,
+                 true_len=None):
     """Returns (y, cache_entry). Cache stores RoPE'd keys at absolute slots.
 
     ``max_len`` sizes the cache for subsequent decoding (>= S); global layers
     pad to max_len (empty slots carry pos=-1 and are masked), local layers
-    keep a rolling window."""
+    keep a rolling window.
+
+    ``true_len`` (traced scalar) marks a right-padded prompt: the sequence is
+    a length-``S`` bucket whose tokens beyond ``true_len`` are padding. Keys
+    are position-local (projection + RoPE of the token's own embedding), so
+    the cache at real positions is bit-identical to an exact-length prefill;
+    pad positions get pos=-1 and are masked out of every later decode step.
+    Requires ``cfg.prefix_len == 0`` (a bidirectional prefix would let pad
+    keys leak into real queries — the batcher guards this)."""
     B, S, _ = x.shape
     max_len = max_len or S
     q, k, v = _project(p, x, cfg)
@@ -365,7 +400,9 @@ def attn_prefill(p, x, cfg: ModelConfig, spec: LayerSpec, positions, max_len=Non
     y = _out(p, o, cfg)
 
     L = cache_len_for(cfg, spec, max_len)
-    if L == S:
+    if true_len is not None:
+        ck, cv, cpos = _padded_prefill_cache(k, v, positions, L, true_len)
+    elif L == S:
         ck, cv, cpos = k, v, positions.astype(jnp.int32)
     elif L > S:
         pad = [(0, 0), (0, L - S), (0, 0), (0, 0)]
@@ -387,6 +424,35 @@ def attn_prefill(p, x, cfg: ModelConfig, spec: LayerSpec, positions, max_len=Non
     return y, cache
 
 
+def _padded_prefill_cache(k, v, positions, L, true_len):
+    """Cache entry from a right-padded (bucketed) prefill of true length
+    ``true_len``: reproduce what the exact-length prefill would have stored.
+
+    Valid positions keep their keys; everything else carries pos=-1. For a
+    rolling window (L < S) slot ``c`` holds the last real position ``p <
+    true_len`` with ``p % L == c`` — gathered from the padded sequence rather
+    than rolled, so pad tokens never evict real keys."""
+    B, S = k.shape[:2]
+    pos32 = positions.astype(jnp.int32)
+    if L >= S:
+        idx = jnp.arange(S, dtype=jnp.int32)
+        cpos = jnp.where(idx < true_len, pos32, -1)
+        if L > S:
+            pad = [(0, 0), (0, L - S), (0, 0), (0, 0)]
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+            cpos = jnp.pad(cpos, (0, L - S), constant_values=-1)
+        return k, v, cpos
+    c = jnp.arange(L, dtype=jnp.int32)
+    src = true_len - L + jnp.mod(c - true_len, L)  # last p < true_len, p%L==c
+    valid = src >= 0
+    safe = jnp.clip(src, 0, S - 1)
+    ck = jnp.take(k, safe, axis=1)
+    cv = jnp.take(v, safe, axis=1)
+    cpos = jnp.where(valid, src, -1)
+    return ck, cv, cpos
+
+
 def attn_decode(p, x, cache, cfg: ModelConfig, spec: LayerSpec, pos):
     """x: (B,1,d); pos: scalar int32 absolute position. Returns (y, cache')."""
     B = x.shape[0]
@@ -405,3 +471,110 @@ def attn_decode(p, x, cache, cfg: ModelConfig, spec: LayerSpec, pos):
     o = grouped_attention(q, ck, cv, qpos, cpos, cfg, spec)
     y = _out(p, o, cfg)
     return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# paged decode: slot-batched decode against a shared block pool
+
+
+def _paged_attention_jnp(qg, k, v, q_pos, k_pos, *, window, prefix_len, cap,
+                         scale):
+    """Batched-positions twin of ``_direct_attention`` for paged decode.
+
+    qg: (B,1,KV,G,hd); k,v: (B,L,KV,hd); q_pos: (B,1); k_pos: (B,L). The
+    einsum/softmax structure is identical to ``_direct_attention`` (same
+    contraction order over hd and L), so a slot-batched paged step matches
+    the dense engine's per-slot vmapped step bit-for-bit — only the mask is
+    per-sequence instead of shared."""
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * scale
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    ok = allow_mask(q_pos, k_pos, window=window, prefix_len=prefix_len)  # (B,1,L)
+    logits = jnp.where(ok[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def attn_decode_paged(p, x, pool, cfg: ModelConfig, spec: LayerSpec, pos_vec,
+                      pages):
+    """Slot-batched decode step against this layer's paged KV pool.
+
+    x: (B,1,d) — one new token per slot; pos_vec: (B,) int32 per-slot
+    absolute positions; pages: (B, P_global) int32 page-table rows (shared
+    across layers — a local layer uses only its first ``window//block_size``
+    logical pages, because its rolling slot ``pos % window`` never leaves
+    them). Returns (y, pool').
+
+    The new K/V land at logical slot ``s = pos % L`` → physical
+    ``(pages[s // bs], s % bs)``. Every slot writes unconditionally (static
+    shapes — same as the dense engine); the runtime points inactive slots'
+    rows at the shared TRASH block so their garbage writes are never read.
+    With ``cfg.use_pallas`` the attention runs in the paged Pallas kernel
+    (gather inside the kernel); otherwise the pool is gathered to a dense
+    (B,L) cache and fed through the jnp path (the oracle semantics).
+    """
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    from repro.optim.compress import dequantize_int8, quantize_int8
+
+    B = x.shape[0]
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    H = cfg.num_heads
+    G = H // KV
+    bs = pool["k"].shape[1]
+    max_len = pages.shape[1] * bs
+    L = cache_len_for(cfg, spec, max_len)
+    P = L // bs
+    window = cfg.window_size if spec.attn_type == "local" else 0
+    quantized = "k_scale" in pool
+
+    q, k, v = _project(p, x, cfg)  # (B,1,H,hd), (B,1,KV,hd)
+    qpos = pos_vec[:, None]  # (B,1)
+    if cfg.pos_type == "rope":
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+
+    s = jnp.mod(pos_vec, L)
+    blk = jnp.take_along_axis(pages, (s // bs)[:, None], axis=1)[:, 0]  # (B,)
+    off = s % bs
+    newk, newv = k[:, 0], v[:, 0]  # (B,KV,hd)
+    pool = dict(pool)
+    if quantized:
+        qk, ksc = quantize_int8(newk)
+        qv, vsc = quantize_int8(newv)
+        pool["k"] = pool["k"].at[blk, off].set(qk)
+        pool["v"] = pool["v"].at[blk, off].set(qv)
+        pool["k_scale"] = pool["k_scale"].at[blk, off].set(ksc)
+        pool["v_scale"] = pool["v_scale"].at[blk, off].set(vsc)
+    else:
+        pool["k"] = pool["k"].at[blk, off].set(newk.astype(pool["k"].dtype))
+        pool["v"] = pool["v"].at[blk, off].set(newv.astype(pool["v"].dtype))
+    pool["pos"] = pool["pos"].at[blk, off].set(pos_vec.astype(jnp.int32))
+
+    tbl = pages[:, :P]  # (B,P)
+    cpos = pool["pos"][tbl].reshape(B, L)
+    if cfg.use_pallas:
+        bias = jnp.where(
+            allow_mask(qpos, cpos, window=window, prefix_len=cfg.prefix_len),
+            0.0, NEG_INF).astype(jnp.float32)[:, 0]  # (B,L)
+        o = paged_decode_attention(
+            q[:, 0], pool["k"], pool["v"], tbl, bias,
+            k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"),
+            softcap=cfg.attn_softcap)
+        o = o[:, None]  # (B,1,H,hd)
+    else:
+        ck = pool["k"][tbl].reshape(B, L, KV, hd)
+        cv = pool["v"][tbl].reshape(B, L, KV, hd)
+        if quantized:
+            ck = dequantize_int8(ck, pool["k_scale"][tbl].reshape(B, L, KV, 1))
+            cv = dequantize_int8(cv, pool["v_scale"][tbl].reshape(B, L, KV, 1))
+        o = _paged_attention_jnp(
+            q.reshape(B, 1, KV, G, hd), ck, cv, qpos, cpos,
+            window=window, prefix_len=cfg.prefix_len, cap=cfg.attn_softcap,
+            scale=hd**-0.5)
+        o = o.reshape(B, 1, H, hd)
+    y = _out(p, o, cfg)
+    return y, pool

@@ -120,18 +120,26 @@ class DecoderLM:
     # ----------------------------------------------------------------- layers
 
     def _apply_layer(self, lp, x, spec: LayerSpec, *, positions, mode,
-                     cache=None, pos=None, max_len=None):
+                     cache=None, pos=None, max_len=None, true_len=None,
+                     pages=None):
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
         new_cache = None
         h = apply_norm(lp["norm1"], x, cfg)
         rwkv_parts = {}
+        if spec.mixer != "attn" and (mode == "decode_paged" or true_len is not None):
+            raise NotImplementedError(
+                f"paged decode / bucketed (true_len) prefill support attention "
+                f"layers only, got mixer={spec.mixer!r} — use the dense path")
         if spec.mixer == "attn":
             if mode == "train":
                 y = A.attn_train(lp["attn"], h, cfg, spec, positions)
             elif mode == "prefill":
                 y, new_cache = A.attn_prefill(lp["attn"], h, cfg, spec, positions,
-                                              max_len=max_len)
+                                              max_len=max_len, true_len=true_len)
+            elif mode == "decode_paged":
+                y, new_cache = A.attn_decode_paged(lp["attn"], h, cache, cfg,
+                                                   spec, pos, pages)
             else:
                 y, new_cache = A.attn_decode(lp["attn"], h, cache, cfg, spec, pos)
         elif spec.mixer == "mamba":
@@ -177,21 +185,22 @@ class DecoderLM:
     # ----------------------------------------------------------------- stack
 
     def _block_body(self, x, block_params, block_cache, *, positions, mode, pos,
-                    max_len=None):
+                    max_len=None, true_len=None, pages=None):
         aux_t = jnp.zeros((), jnp.float32)
         new_entries = []
         for j, spec in enumerate(self.specs):
             entry = None if block_cache is None else block_cache[j]
             x, aux, nc = self._apply_layer(
                 block_params[j], x, spec, positions=positions, mode=mode,
-                cache=entry, pos=pos, max_len=max_len,
+                cache=entry, pos=pos, max_len=max_len, true_len=true_len,
+                pages=pages,
             )
             aux_t = aux_t + aux
             new_entries.append(nc)
         return x, aux_t, new_entries
 
     def _stack(self, params, x, positions, mode, cache=None, pos=None,
-               max_len=None):
+               max_len=None, true_len=None, pages=None):
         cfg = self.cfg
         if mode == "train":
             def body(x, bp):
@@ -217,16 +226,18 @@ class DecoderLM:
             def sb(xc, bp):
                 xo, _, nc = self._block_body(
                     xc, bp, None, positions=positions, mode="prefill", pos=None,
-                    max_len=max_len)
+                    max_len=max_len, true_len=true_len)
                 return xo, nc
 
             x, caches = jax.lax.scan(sb, x, params["blocks"])
             return x, jnp.zeros((), jnp.float32), caches
-        # decode
+        # decode / decode_paged (pos is a scalar for decode, a (B,) vector of
+        # per-slot positions for decode_paged; pages threads the page table)
         def sb(xc, inp):
             bp, bc = inp
             xo, _, nc = self._block_body(
-                xc, bp, bc, positions=positions, mode="decode", pos=pos)
+                xc, bp, bc, positions=positions, mode=mode, pos=pos,
+                pages=pages)
             return xo, nc
 
         x, caches = jax.lax.scan(sb, x, (params["blocks"], cache))
@@ -327,15 +338,44 @@ class DecoderLM:
     def cache_shape(self, batch: int, max_len: int):
         return jax.eval_shape(lambda: self.init_cache(batch, max_len))
 
+    def init_paged_cache(self, n_phys_blocks: int, block_size: int,
+                         quant: Optional[str] = None):
+        """Per-layer paged KV pools (attention-only stacks — the paged data
+        plane covers KV caches; SSM/RWKV state is not positional and stays on
+        the dense slot path). Block ids are owned by
+        ``repro.runtime.paging.PageAllocator``."""
+        cfg = self.cfg
+        caches = []
+        for spec in self.specs:
+            if spec.mixer != "attn":
+                raise NotImplementedError(
+                    f"paged KV cache supports attention layers only, got "
+                    f"mixer={spec.mixer!r} (use init_cache / the dense layout)")
+            entry = A.init_paged_entry(cfg, spec, n_phys_blocks, block_size,
+                                       quant=quant)
+            caches.append(
+                jax.tree.map(lambda l: jnp.broadcast_to(l[None], (self.n_blocks,) + l.shape), entry)
+            )
+        return caches
+
     def prefill(self, params, *, tokens=None, embeds=None, prefix_embeds=None,
-                max_len=None):
+                max_len=None, true_len=None):
         """Returns (last_token_logits (B,V), cache). ``max_len`` sizes the KV
-        cache for subsequent decode (defaults to the prefill length)."""
+        cache for subsequent decode (defaults to the prefill length).
+
+        ``true_len`` (traced scalar int32) marks a right-padded bucketed
+        prompt: logits come from position ``true_len - 1`` and cache slots at
+        pad positions carry pos=-1 (masked) — one compiled program per bucket
+        length serves every true length inside it."""
         x = self._embed_in(params, tokens, embeds, prefix_embeds)
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
         x, _, caches = self._stack(params, x, positions, "prefill",
-                                   max_len=max_len)
-        logits = self._unembed(params, x[:, -1:, :])
+                                   max_len=max_len, true_len=true_len)
+        if true_len is None:
+            last = x[:, -1:, :]
+        else:
+            last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+        logits = self._unembed(params, last)
         return logits[:, 0, :], caches
 
     def decode_step(self, params, cache, *, tokens=None, embeds=None, pos=None):
@@ -346,6 +386,20 @@ class DecoderLM:
         x, _, caches = self._stack(params, x, None, "decode", cache=cache, pos=pos)
         logits = self._unembed(params, x)
         return logits[:, 0, :], caches
+
+    def decode_step_paged(self, params, pools, *, tokens=None, pos_vec=None,
+                          pages=None):
+        """One slot-batched decode step against paged KV pools.
+
+        tokens: (B,1); pos_vec: (B,) int32 per-slot absolute positions;
+        pages: (B,P) int32 page-table rows (all traced — the compiled program
+        is independent of which physical blocks a slot owns). Returns
+        (logits (B,V), pools')."""
+        x = self._embed_in(params, tokens, None, None)
+        x, _, pools = self._stack(params, x, None, "decode_paged", cache=pools,
+                                  pos=pos_vec, pages=pages)
+        logits = self._unembed(params, x)
+        return logits[:, 0, :], pools
 
 
 def build_model(cfg: ModelConfig) -> DecoderLM:
